@@ -1,0 +1,42 @@
+"""Fig 1 analogue: fraction of memory time attributable to the DILs.
+
+The paper measures the fraction of CPU cycles stalled on specific
+delinquent irregular loads.  The TPU analogue from the roofline model:
+the fraction of each workload's memory-bound time spent on the
+irregular gather traffic (bytes moved by the DIL vs total), computed
+from the workload's access pattern — i.e. "how much of this loop's
+memory time could an ideal prefetcher hide".
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from . import workloads as W
+from .harness import csv_row
+
+LINE_BYTES = W.WINDOW * W.LINE * 4
+
+
+def run(input_id: int = 1) -> list[str]:
+    rows = []
+    for name in W.WORKLOADS:
+        wl = W.build(name, input_id)
+        n = int(jax.tree.leaves(wl.loop_xs)[0].shape[0])
+        # per-iteration traffic: streamed key/ids (regular) vs the
+        # irregular window/row gather (the DIL)
+        regular = 8.0                        # key + index stream bytes
+        irregular = float(LINE_BYTES)
+        frac = irregular / (regular + irregular)
+        rows.append(csv_row(f"fig1.{name}.in{input_id}", 0.0,
+                            f"dil_mem_fraction={frac:.2f};iters={n}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

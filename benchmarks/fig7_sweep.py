@@ -1,0 +1,95 @@
+"""Fig 7 / Fig 8 reproduction: prefetch-distance sweep per workload.
+
+For each workload: baseline (unmodified scan) vs inline-prefetch rewrite
+at k ∈ {2..256} powers of two, plus the Pallas-kernel path.
+
+This container is CPU-only, and an XLA scan on one core has no async
+memory path — so wall-clock here measures the *cost* of the rewrite,
+not its benefit.  The two derived numbers split the paper's figure
+faithfully:
+
+* ``cpu_overhead`` — measured: extra work added by the duplicated
+  backward slice + ring bookkeeping (the analogue of the paper's
+  Fig 7b dynamic-instruction overhead; the paper's own speedups are
+  *net of* this overhead);
+* ``tpu_model``   — the v5e roofline model of Fig 7a: the baseline pays
+  one serial HBM round trip per iteration, the pipelined loop pays
+  max(iter_time, latency/k); small-trip-count lost opportunity included
+  (the PageRank/Cuckoo effect of §5.2.2).
+
+Outputs correctness too: every variant's result is asserted identical
+to the baseline before timing (paper §4.2's exact-output requirement).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import planner
+
+from . import workloads as W
+from .harness import csv_row, time_fn
+
+DISTANCES = [2, 4, 8, 16, 32, 64, 128, 256]
+
+
+def expected_tpu_speedup(row_bytes: int, iter_flops: float,
+                         iter_bytes: float, k: int,
+                         trip: int | None = None) -> float:
+    """Roofline model of the paper's mechanism on v5e: the baseline pays
+    one HBM latency per iteration (serial dependent gather); the
+    pipelined version pays max(iter_time, latency/k) — the prefetch
+    distance amortises the round trip across k in-flight DMAs."""
+    hw = planner.V5E
+    t_iter = planner.iter_time(iter_flops, iter_bytes + row_bytes, hw)
+    t_base = t_iter + hw.hbm_latency
+    t_pf = max(t_iter, hw.hbm_latency / max(k, 1))
+    if trip is not None and k > trip:       # lookahead beyond trip count
+        t_pf = t_base                       # lost opportunity (paper §5.2.2)
+    return t_base / max(t_pf, 1e-12)
+
+
+def run(input_id: int = 1, distances=None, names=None) -> list[str]:
+    rows = []
+    for name in (names or W.WORKLOADS):
+        wl = W.build(name, input_id)
+        base = wl.baseline
+        ref = base()
+        t_base = time_fn(base)
+        rows.append(csv_row(f"fig7.{name}.baseline.in{input_id}", t_base,
+                            "speedup=1.00"))
+        n_iter = _trip_count(wl)
+        prof = W.PROFILES[name]
+        trip = prof["inner_trip"] or n_iter
+        for k in (distances or DISTANCES):
+            fn = wl.pipelined(k)
+            out = fn()
+            wl.check(out, ref)
+            t = time_fn(fn)
+            exp = expected_tpu_speedup(
+                row_bytes=prof["dil_bytes"], iter_flops=prof["iter_flops"],
+                iter_bytes=prof["iter_bytes"], k=k, trip=trip)
+            rows.append(csv_row(
+                f"fig7.{name}.k{k}.in{input_id}", t,
+                f"cpu_overhead={t / t_base:.2f};tpu_model={exp:.2f}"))
+        kfn = wl.kernel
+        out = kfn()
+        wl.check(out, ref)
+        t = time_fn(kfn)
+        rows.append(csv_row(f"fig7.{name}.kernel.in{input_id}", t,
+                            "interpret_mode=1"))
+    return rows
+
+
+def _trip_count(wl) -> int | None:
+    xs = jax.tree.leaves(wl.loop_xs)
+    return int(xs[0].shape[0]) if xs else None
+
+
+def main(input_id: int = 1):
+    for r in run(input_id):
+        print(r)
+
+
+if __name__ == "__main__":
+    import sys
+    main(int(sys.argv[1]) if len(sys.argv) > 1 else 1)

@@ -1,0 +1,23 @@
+"""Timing harness: the paper's methodology (5 runs, report the median)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *, runs: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock seconds per call of a jitted nullary fn."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(runs):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,110 @@
+"""Roofline analysis per (arch × shape × mesh) — deliverable (g).
+
+Three terms per cell:
+
+    compute    = FLOPs / (chips × 197e12)
+    memory     = HBM bytes / (chips × 819e9)
+    collective = collective bytes / (chips × 50e9)
+
+Sources — two per cell, both reported:
+
+* **analytic** (primary, used for the terms): derived from the
+  architecture in :mod:`benchmarks.analytic`.  Necessary because XLA's
+  ``HloCostAnalysis`` counts while-loop bodies ONCE and every heavy loop
+  here is rolled (stacked-layer scan, microbatch scan, flash block
+  scans) — the module-level numbers under-report by the trip-count
+  product;
+* **hlo** (cross-check): ``compiled.cost_analysis()`` FLOPs/bytes and
+  the collective-op bytes parsed from the partitioned
+  ``compiled.as_text()`` — i.e. per-device, loop-bodies-once.  Useful
+  relatively (same loop structure between perf-iteration variants) and
+  as the proof that the lower+compile deliverable ran.
+
+MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N_active for MoE; the
+useful_ratio = MODEL_FLOPS / compiled FLOPs exposes remat/recompute and
+masked-attention waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+
+from .analytic import ICI_BW, PEAK_FLOPS, HBM_BW, analytic_cell
+
+MESH_MODEL_AXIS = 16
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["n_devices"]
+    cfg = ARCHS[rec["arch"]]
+    shape = SHAPES[rec["shape"]]
+    cost = analytic_cell(cfg, shape, chips, MESH_MODEL_AXIS)
+    out = cost.terms(chips)
+    out.update(
+        rec=rec, model_flops=cost.flops_useful,
+        flops_analytic=cost.flops, hbm_analytic=cost.hbm_bytes,
+        coll_analytic=cost.coll_bytes,
+        hlo_flops_dev=rec.get("flops", -1.0),
+        hlo_bytes_dev=rec.get("bytes_accessed", -1.0),
+        hlo_coll_dev=rec.get("collectives", {}).get("total", -1),
+        breakdown=cost.breakdown)
+    return out
+
+
+def load_all(dirpath: str = "benchmarks/results/dryrun") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(dirpath: str = "benchmarks/results/dryrun",
+          mesh: str = "single") -> list[str]:
+    rows = ["arch,shape,mesh,status,t_compute_s,t_memory_s,"
+            "t_collective_s,dominant,model_flops,useful_ratio,"
+            "roofline_fraction,hlo_flops_dev,hlo_coll_dev"]
+    for rec in load_all(dirpath):
+        if rec.get("mesh") != mesh or rec.get("opts"):
+            continue        # perf-variant records live in §Perf, not here
+        tag = f"{rec['arch']},{rec['shape']},{rec['mesh']}"
+        if rec.get("status") == "skipped":
+            rows.append(f"{tag},skipped,,,,,,,,,")
+            continue
+        a = analyze(rec)
+        if a is None:
+            rows.append(f"{tag},error,,,,,,,,,")
+            continue
+        rows.append(
+            f"{tag},ok,{a['t_compute']:.4e},{a['t_memory']:.4e},"
+            f"{a['t_collective']:.4e},{a['dominant']},"
+            f"{a['model_flops']:.3e},{a['useful_ratio']:.3f},"
+            f"{a['roofline_fraction']:.3f},{a['hlo_flops_dev']:.3e},"
+            f"{a['hlo_coll_dev']:.3e}")
+    return rows
+
+
+def main():
+    for mesh in ("single", "multi"):
+        print(f"# roofline table ({mesh}-pod)")
+        for r in table(mesh=mesh):
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

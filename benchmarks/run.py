@@ -1,0 +1,48 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+``python -m benchmarks.run [--quick]`` prints ``name,us_per_call,derived``
+CSV rows for every reproduced artifact, plus the roofline table from any
+dry-run results present.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from . import (fig1_stall_fraction, fig4_helper_thread, fig7_sweep,
+                   fig9_uarch, fig10_inline_vs_helper, roofline,
+                   table2_dil_screen)
+
+    print("name,us_per_call,derived")
+    for row in table2_dil_screen.run():
+        if row.startswith("workload"):
+            continue                       # header
+        name, rest = row.split(",", 1)
+        print(f"table2.{name},0.0,{rest.replace(',', ';')}")
+    for row in fig1_stall_fraction.run():
+        print(row)
+    distances = [2, 8, 64] if quick else None
+    names = ["STLHistogram", "HashJoin"] if quick else None
+    for row in fig7_sweep.run(1, distances=distances, names=names):
+        print(row)
+    if not quick:
+        for row in fig7_sweep.run(2, distances=[2, 8, 64, 256]):
+            print(row)
+    for row in fig4_helper_thread.run():
+        print(row)
+    for row in fig10_inline_vs_helper.run():
+        print(row)
+    for row in fig9_uarch.run():
+        print(row)
+    try:
+        for mesh in ("single", "multi"):
+            for row in roofline.table(mesh=mesh):
+                print(f"roofline.{mesh}," + row)
+    except Exception as e:  # dry-run results not generated yet
+        print(f"roofline.unavailable,0.0,{type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""STLHistogram end-to-end (paper §3/§5): screen, rewrite, sweep k.
+
+Run:  PYTHONPATH=src python examples/histogram.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax
+import numpy as np
+
+from benchmarks import workloads as W
+from benchmarks.harness import time_fn
+from repro.core import dil
+
+wl = W.build("STLHistogram", 1)
+
+# The screen on the histogram loop (Table 2 row)
+rep = dil.screen_loop(wl.loop_body, wl.loop_init,
+                      jax.tree.map(lambda a: a[0], wl.loop_xs),
+                      delinquent_bytes=1 << 16)
+print("DIL screen (STLHistogram):")
+print(rep.summary())
+
+ref = wl.baseline()
+t_base = time_fn(wl.baseline, runs=3, warmup=1)
+print(f"\nbaseline: {t_base * 1e6:.0f} us")
+for k in (2, 8, 32, 128):
+    fn = wl.pipelined(k)
+    wl.check(fn(), ref)
+    t = time_fn(fn, runs=3, warmup=1)
+    print(f"prefetch k={k:<4}: {t * 1e6:.0f} us  "
+          f"(speedup {t_base / t:.2f}x, output exact)")
+kt = time_fn(wl.kernel, runs=3, warmup=1)
+wl.check(wl.kernel(), ref)
+print(f"pallas hash_probe kernel: {kt * 1e6:.0f} us (interpret mode)")

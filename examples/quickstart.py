@@ -1,0 +1,50 @@
+"""Quickstart: the paper's technique in five minutes.
+
+1. Write an irregular-gather loop (hash-table histogram).
+2. Run the DIL screen — see the load classified prefetchable.
+3. Swap lax.scan for repro.core.prefetch_scan — bit-identical results,
+   with the gather hoisted k iterations ahead (the carrot-and-horse
+   schedule of the paper, Fig 6).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dil, pipeline, planner
+
+N = 1 << 18
+rng = np.random.default_rng(0)
+table = rng.standard_normal((N, 8)).astype(np.float32)   # 8 MiB, HBM-class
+keys = rng.integers(0, 1 << 30, size=4096).astype(np.int32)
+
+
+def body(carry, key):
+    """The paper's Listing-1 shape: hash -> irregular gather -> reduce."""
+    i, acc = carry
+    idx = (key * 40503) % N                  # hash (irregular by design)
+    row = jnp.take(table, idx, axis=0)       # the DIL
+    return (i + 1, acc + row.sum()), None
+
+
+init = (jnp.int32(0), jnp.float32(0))
+
+# -- 2. the DIL screen -------------------------------------------------------
+report = dil.screen_loop(body, init, keys[0])
+print("DIL screen:")
+print(report.summary())
+
+# -- 3. carrot-and-horse rewrite --------------------------------------------
+k = planner.plan_prefetch_distance(row_bytes=8 * 4, flops_per_iter=16,
+                                   hbm_bytes_per_iter=4)
+print(f"\nplanned prefetch distance k = {k}")
+
+ref, _ = jax.lax.scan(body, init, keys)
+opt, _ = pipeline.prefetch_scan(body, init, keys, prefetch_distance=k)
+np.testing.assert_array_equal(np.asarray(ref[1]), np.asarray(opt[1]))
+print(f"baseline == prefetched: {float(ref[1]):.4f} (bit-exact)")

@@ -1,0 +1,45 @@
+"""Batched serving with a paged KV cache (the serving-side DIL).
+
+Prefills a batch of prompts on a reduced qwen3-family model, decodes
+greedily, and demonstrates the paged_kv inline-prefetch kernel scoring
+one decode step against a paged pool (page table indirection =
+``pool[page_table[b, p]]``, the paper's a[b[i]] pattern).
+
+Run:  PYTHONPATH=src python examples/serve_paged.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.models as models
+from repro.configs import get_arch, reduced
+from repro.kernels import paged_attn_scores, paged_attn_scores_ref
+from repro.serving import greedy_generate
+
+cfg = reduced(get_arch("qwen3-8b"), n_layers=2, d_model=64, n_heads=4,
+              n_kv_heads=2, d_ff=128, vocab=512)
+params = models.init_params(cfg, jax.random.PRNGKey(0))
+
+B, S, n_new = 4, 12, 8
+prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                             cfg.vocab_size)
+toks = greedy_generate(cfg, params, prompts, n_new)
+print(f"served batch of {B}: prompts {S} tokens -> +{n_new} greedy tokens")
+print(np.asarray(toks))
+
+# --- paged KV scoring with the inline-prefetch kernel -----------------------
+rng = np.random.default_rng(0)
+pool = rng.standard_normal((64, 16, 32)).astype(np.float32)   # 64 pages
+page_table = rng.integers(0, 64, size=(B, 4)).astype(np.int32)
+q = rng.standard_normal((B, 32)).astype(np.float32)
+scores = paged_attn_scores(pool, page_table, q, lookahead=4)
+ref = paged_attn_scores_ref(jnp.asarray(pool), jnp.asarray(page_table),
+                            jnp.asarray(q))
+np.testing.assert_allclose(np.asarray(scores), np.asarray(ref), rtol=1e-4,
+                           atol=1e-4)
+print(f"paged_kv kernel scores {scores.shape}: match ref (page-table "
+      "indirection prefetched 4 pages ahead)")

@@ -1,0 +1,54 @@
+"""End-to-end driver: train a ~100M-parameter LM with the full runtime
+(data pipeline -> pjit train step -> checkpointing -> watchdog).
+
+Default is a quick demonstration (--steps 20); pass --steps 300 for the
+full few-hundred-step run (CPU-bound in this container; the same driver
+is what launch/train.py runs on a real mesh).
+
+Run:  PYTHONPATH=src python examples/train_100m.py --steps 20
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import dataclasses
+
+from repro.configs import get_arch
+from repro.launch.mesh import make_local_mesh
+from repro.optim import AdamWConfig
+from repro.runtime import TrainConfig, Trainer
+
+
+def cfg_100m():
+    base = get_arch("qwen3-8b")
+    return dataclasses.replace(
+        base, name="qwen3-100m", n_layers=12, d_model=640, n_heads=10,
+        n_kv_heads=5, d_head=64, d_ff=2560, vocab_size=32768, remat=False)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    cfg = cfg_100m()
+    print(f"model: {cfg.name}  params={cfg.param_count() / 1e6:.1f}M")
+    tr = Trainer(cfg, TrainConfig(microbatches=1, grad_compression=True,
+                                  peak_lr=3e-4, warmup=20, ckpt_every=50,
+                                  adamw=AdamWConfig(lr=3e-4)),
+                 make_local_mesh(), seq_len=args.seq,
+                 global_batch=args.batch, ckpt_dir=args.ckpt)
+    if tr.step:
+        print(f"resumed from checkpoint at step {tr.step}")
+    hist = tr.run(args.steps, log_every=5)
+    for step, loss, dt in hist:
+        print(f"step {step:>4}  loss {loss:.4f}  {dt * 1e3:.0f} ms")
+    print("watchdog healthy:", tr.watchdog.healthy())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Fault-tolerant checkpointing: atomic, async, reshard-on-load.
+
+Layout: ``<dir>/step_<n>/`` holding one ``arrays.npz`` (keys are
+parameter paths) plus ``manifest.json``.  Writes go to ``.tmp-step_<n>``
+and are renamed into place, so a crash mid-write never corrupts the
+latest checkpoint; ``latest_step`` only trusts directories with a
+manifest.  ``restore`` rebuilds the target pytree structure and
+``device_put``s each leaf with the *requested* sharding — which is what
+makes elastic re-mesh (restore onto a different mesh shape) a pure
+load-time operation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import jax.tree_util as jtu
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jtu.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jtu.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
+    """Atomic synchronous save.  Returns the final directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = os.path.join(ckpt_dir, f".tmp-step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = jtu.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    for p, v in flat:
+        arr = np.asarray(v)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            arr = arr.astype(np.float32)   # npz-safe; restore recasts
+        arrays[_path_str(p)] = arr
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {"step": step, "time": time.time(),
+                "n_arrays": len(arrays), "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target_tree, shardings=None):
+    """Load into the structure of ``target_tree``; optionally reshard."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    flat, tree = jtu.tree_flatten_with_path(target_tree)
+    shard_flat = (jtu.tree_leaves(shardings) if shardings is not None
+                  else [None] * len(flat))
+    leaves = []
+    for (path, ref), shd in zip(flat, shard_flat):
+        arr = arrays[_path_str(path)]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch at {_path_str(path)}: "
+                             f"{arr.shape} vs {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        leaves.append(jax.device_put(arr, shd) if shd is not None
+                      else jax.device_put(arr))
+    return jtu.tree_unflatten(jtu.tree_structure(target_tree), leaves)
+
+
+class CheckpointManager:
+    """Async writer + retention.  ``save_async`` snapshots to host memory
+    synchronously (cheap) and writes in a background thread so the train
+    loop never blocks on disk."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save_async(self, step: int, tree, extra=None):
+        host = jax.tree.map(np.asarray, tree)   # snapshot before mutation
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host, extra), daemon=True)
+        self._thread.start()
+
+    def _write(self, step, host_tree, extra):
+        save(self.dir, step, host_tree, extra)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.dir)
+            if n.startswith("step_") and os.path.exists(
+                os.path.join(self.dir, n, "manifest.json")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def latest(self):
+        return latest_step(self.dir)

@@ -1,0 +1,58 @@
+"""Architecture registry: ``--arch <id>`` resolution + assigned shapes."""
+from __future__ import annotations
+
+import dataclasses
+
+from ..models.config import ModelConfig, reduced  # noqa: F401
+from . import (command_r_plus_104b, dbrx_132b, deepseek_moe_16b,
+               h2o_danube3_4b, llava_next_mistral_7b, phi4_mini_3_8b,
+               qwen3_8b, recurrentgemma_2b, rwkv6_1_6b, whisper_large_v3)
+
+ARCHS: dict[str, ModelConfig] = {
+    "qwen3-8b": qwen3_8b.CONFIG,
+    "phi4-mini-3.8b": phi4_mini_3_8b.CONFIG,
+    "h2o-danube-3-4b": h2o_danube3_4b.CONFIG,
+    "command-r-plus-104b": command_r_plus_104b.CONFIG,
+    "rwkv6-1.6b": rwkv6_1_6b.CONFIG,
+    "llava-next-mistral-7b": llava_next_mistral_7b.CONFIG,
+    "whisper-large-v3": whisper_large_v3.CONFIG,
+    "deepseek-moe-16b": deepseek_moe_16b.CONFIG,
+    "dbrx-132b": dbrx_132b.CONFIG,
+    "recurrentgemma-2b": recurrentgemma_2b.CONFIG,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; choose from {list(ARCHS)}")
+    return ARCHS[name]
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic attention."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("skipped: pure full-attention arch; long_500k "
+                       "requires sub-quadratic attention (DESIGN.md)")
+    return True, ""
+
+
+def all_cells():
+    for arch, cfg in ARCHS.items():
+        for shape in SHAPES.values():
+            yield arch, cfg, shape

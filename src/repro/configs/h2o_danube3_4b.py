@@ -1,0 +1,11 @@
+"""h2o-danube-3-4b [dense] — 24L d_model=3840 32H (GQA kv=8) d_ff=10240
+vocab=32000; llama+mistral mix, sliding-window attention.
+[arXiv:2401.16818; unverified]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, d_head=120,
+    d_ff=10240, vocab_size=32000,
+    sliding_window=4096, rope_theta=1e4, act="swiglu",
+)

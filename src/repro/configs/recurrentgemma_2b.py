@@ -1,0 +1,13 @@
+"""recurrentgemma-2b [hybrid] — 26L d_model=2560 10H (GQA kv=1, MQA)
+d_ff=7680 vocab=256000; RG-LRU + local attn, 1:2 ratio (two recurrent
+blocks per local-attention block), window 2048.  [arXiv:2402.19427; hf]"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, d_head=256,
+    d_ff=7680, vocab_size=256000,
+    mixer_pattern=("rglru", "rglru", "attn"), sliding_window=2048,
+    rglru_d_rnn=2560, rglru_conv_width=4, act="swiglu",
+    tie_embeddings=True,
+)

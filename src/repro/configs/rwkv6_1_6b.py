@@ -1,0 +1,14 @@
+"""rwkv6-1.6b [ssm] — 24L d_model=2048 (attn-free) d_ff=7168 vocab=65536;
+Finch, data-dependent decay.  [arXiv:2404.05892; unverified]
+
+Channel-mix uses the two-matrix (gelu) MLP so the parameter count lands
+at ~1.6B as published (RWKV's relu² channel mix is two matrices).
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b", family="ssm",
+    n_layers=24, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=7168, vocab_size=65536,
+    mixer_pattern=("rwkv6",), rwkv_head_dim=64, act="gelu",
+)

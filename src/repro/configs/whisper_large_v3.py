@@ -1,0 +1,17 @@
+"""whisper-large-v3 [audio] — 32L d_model=1280 20H (kv=20, MHA) d_ff=5120
+vocab=51866; enc-dec, conv frontend STUBBED (input_specs() provides
+precomputed frame embeddings, encoder_seq=1500).  [arXiv:2212.04356;
+unverified]
+
+Assigned shapes apply to the decoder backbone; positional encoding uses
+RoPE in this backbone reproduction (Whisper's learned absolute
+embeddings are an orthogonal detail to the memory-system study).
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", family="encdec",
+    n_layers=32, d_model=1280, n_heads=20, n_kv_heads=20, d_head=64,
+    d_ff=5120, vocab_size=51866,
+    n_encoder_layers=32, encoder_seq=1500, act="gelu",
+)

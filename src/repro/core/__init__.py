@@ -1,0 +1,19 @@
+"""Core: the paper's contribution — DIL screening + inline prefetch codegen.
+
+Public API:
+
+* :func:`repro.core.dil.screen` / :func:`screen_loop` — the DIL screen
+  (§4.1): classify loads in a loop as constant / striding / irregular,
+  delinquent, runnable vs chasing, control-(in)dependent, prefetchable.
+* :func:`repro.core.pipeline.prefetch_scan` — drop-in ``lax.scan``
+  replacement implementing the carrot-and-horse inline prefetcher (§4.2).
+* :func:`repro.core.pipeline.pipelined_scan` — the manual split API.
+* :func:`repro.core.planner.plan_prefetch_distance` — static ``k``.
+"""
+from .dil import (LoadReport, LoopReport, screen, screen_loop,  # noqa: F401
+                  screen_scan_eqn, delta_histogram, is_irregular_deltas,
+                  CONSTANT, STRIDING, IRREGULAR)
+from .pipeline import (prefetch_scan, pipelined_scan,  # noqa: F401
+                       plan_prefetch, PrefetchPlan)
+from .planner import (HardwareModel, V5E, plan_prefetch_distance,  # noqa: F401
+                      iter_time, ring_bytes)

@@ -1,0 +1,549 @@
+"""The DIL screen: delinquent-irregular-load analysis over loop bodies.
+
+Reproduces §4.1 of the paper on jaxpr dataflow instead of x86 traces:
+
+* **load** — a ``gather`` / ``dynamic_slice`` op with data-dependent
+  indices (the jaxpr analogue of a load instruction whose address is
+  computed at runtime),
+* **constant / striding / irregular** — classification of the *index
+  stream* feeding the load: constant-address loads read loop-invariant
+  addresses; striding loads read an affine function of an affine
+  induction recurrence; everything else is irregular (hash functions,
+  indices streamed from data, indices produced by other loads, ...),
+* **delinquent** — the gathered table cannot be VMEM/cache resident
+  (``table_bytes >= delinquent_bytes``).  On TPU every irregular gather
+  from an HBM-resident operand pays a full HBM round trip, so footprint
+  *is* the delinquency criterion (we cannot observe ROB stalls; we do not
+  need to),
+* **runnable vs chasing** — no cycle of the (recurrence-closed) backward
+  slice of the index contains an irregular memory op.  Cycles arise only
+  through loop-carried dependencies, exactly like the paper's
+  higher-IP -> lower-IP edges,
+* **control independent** — the slice contains no ``cond``/``while``, and
+  no ``select_n`` whose predicate depends on an in-loop load (the
+  binary-search-tree exclusion of §4),
+* **prefetchable** = irregular ∧ delinquent ∧ runnable ∧ control-indep,
+* **critical / coalescing** — loads whose index differs from another
+  load's by a constant offset are grouped; only the largest-footprint
+  member of the group is kept (same-cache-line rule of §4.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+from jax.extend import core as jcore
+
+from . import ir
+from .graphs import nodes_in_cycles
+
+LOAD_PRIMS = ("gather", "dynamic_slice")
+
+# Ops through which an address computation remains (piecewise-)affine.
+# Comparisons/logic are allowed because they only ever feed ``select_n``
+# predicates (branchless normalisation such as jnp.take's negative-index
+# wrap); data-dependence still surfaces through the uses-xs / has-load
+# checks, and genuine control dependence through the select-predicate rule.
+AFFINE_PRIMS = {
+    "add", "sub", "neg", "convert_element_type", "broadcast_in_dim",
+    "reshape", "squeeze", "expand_dims", "slice", "transpose", "copy",
+    "iota", "concatenate", "max", "min", "clamp", "stop_gradient",
+    "select_n",  # select keeps *shape* affine; control-dep handled separately
+    "lt", "le", "gt", "ge", "eq", "ne", "and", "or", "not", "xor",
+    "is_finite", "sign", "abs",
+}
+# mul/div by a constant stays affine; handled specially.
+SCALE_PRIMS = {"mul", "div", "shift_left", "shift_right_logical",
+               "shift_right_arithmetic"}
+
+CONSTANT, STRIDING, IRREGULAR = "constant", "striding", "irregular"
+
+
+@dataclasses.dataclass
+class LoadReport:
+    op_idx: int
+    prim: str
+    table_shape: tuple
+    table_dtype: Any
+    table_bytes: int
+    index_class: str
+    delinquent: bool
+    runnable: bool
+    control_independent: bool
+    prefetchable: bool
+    critical: bool = False
+    group_root: int = -1
+    n_cycles_with_loads: int = 0
+    reasons: list = dataclasses.field(default_factory=list)
+
+    def row(self) -> str:
+        flag = "PREFETCHABLE" if (self.prefetchable and self.critical) else (
+            "coalesced" if self.prefetchable else "-")
+        return (f"op{self.op_idx:>4} {self.prim:<13} table={self.table_shape!s:<16} "
+                f"{self.table_bytes/2**20:8.2f}MiB {self.index_class:<9} "
+                f"delinq={int(self.delinquent)} runnable={int(self.runnable)} "
+                f"ctrl_indep={int(self.control_independent)} {flag}")
+
+
+@dataclasses.dataclass
+class LoopReport:
+    flat: ir.FlatFn
+    carry_in_ids: list[int]
+    carry_out_atoms: list[Any]
+    xs_ids: list[int]
+    stable_ids: set[int]
+    loads: list[LoadReport]
+
+    @property
+    def dils(self) -> list[LoadReport]:
+        return [l for l in self.loads if l.index_class == IRREGULAR and l.delinquent]
+
+    @property
+    def prefetchable(self) -> list[LoadReport]:
+        return [l for l in self.loads if l.prefetchable]
+
+    @property
+    def critical_targets(self) -> list[LoadReport]:
+        return [l for l in self.loads if l.prefetchable and l.critical]
+
+    def summary(self) -> str:
+        lines = [f"loads={len(self.loads)} DILs={len(self.dils)} "
+                 f"prefetchable={len(self.prefetchable)} "
+                 f"critical={len(self.critical_targets)}"]
+        lines += [l.row() for l in self.loads]
+        return "\n".join(lines)
+
+
+def _table_info(fn: ir.FlatFn, atom) -> tuple[tuple, Any, int]:
+    if isinstance(atom, ir.Lit):
+        arr = np.asarray(atom.val)
+        return tuple(arr.shape), arr.dtype, arr.nbytes
+    if atom in fn.const_env:
+        arr = fn.const_env[atom]
+        aval = jax.api_util.shaped_abstractify(arr)
+        return tuple(aval.shape), aval.dtype, int(
+            math.prod(aval.shape) * aval.dtype.itemsize)
+    aval = fn.avals.get(atom)
+    if aval is None:
+        return (), np.dtype(np.float32), 0
+    return tuple(aval.shape), aval.dtype, int(
+        math.prod(aval.shape) * np.dtype(aval.dtype).itemsize)
+
+
+def _index_atoms(op: ir.Op) -> list[Any]:
+    if op.name == "gather":
+        return [op.invals[1]]
+    return list(op.invals[1:])  # dynamic_slice start indices
+
+
+class _LoopAnalysis:
+    """Shared machinery for a single loop body's flat IR."""
+
+    def __init__(self, fn: ir.FlatFn, carry_in_ids, carry_out_atoms,
+                 xs_ids, stable_ids):
+        self.fn = fn
+        self.carry_in_ids = list(carry_in_ids)
+        self.carry_out_atoms = list(carry_out_atoms)
+        self.xs_ids = set(xs_ids)
+        self.stable_ids = set(stable_ids)
+        self.carry_pos = {cid: p for p, cid in enumerate(self.carry_in_ids)}
+
+    # -- recurrence-closed backward slice -----------------------------------
+    def closed_slice(self, roots: Sequence[int]) -> tuple[list[ir.Op], set[int]]:
+        """Backward slice of ``roots``, closed under the recurrences of every
+        carry it reads.  Returns (ops, carry_positions_used)."""
+        fn = self.fn
+        root_ids = [r for r in roots if isinstance(r, int)]
+        ops = ir.backward_slice(fn, root_ids)
+        used_carries: set[int] = set()
+        while True:
+            free = ir.slice_free_inputs(fn, ops, root_ids)
+            new_carries = {self.carry_pos[f] for f in free
+                           if f in self.carry_pos} - used_carries
+            if not new_carries:
+                return ops, used_carries
+            used_carries |= new_carries
+            more = ir.backward_slice(fn, root_ids + [
+                a for p in used_carries
+                if isinstance(self.carry_out_atoms[p], int)
+                for a in [self.carry_out_atoms[p]]])
+            ops = more
+
+    # -- affinity -----------------------------------------------------------
+    def _is_const_atom(self, atom) -> bool:
+        return isinstance(atom, ir.Lit) or atom in self.fn.const_env \
+            or atom in self.stable_ids
+
+    def slice_is_affine(self, ops: Sequence[ir.Op]) -> bool:
+        produced = {o for op in ops for o in op.outs}
+        for op in ops:
+            if op.name in AFFINE_PRIMS:
+                continue
+            if op.name in SCALE_PRIMS:
+                # affine iff at most one operand is loop-varying
+                varying = [a for a in op.invals
+                           if isinstance(a, int) and a in produced
+                           or (isinstance(a, int) and a in self.carry_pos)]
+                if len(varying) <= 1:
+                    continue
+                return False
+            return False
+        return True
+
+    # -- cycles -------------------------------------------------------------
+    def cycle_ops(self, ops: Sequence[ir.Op]) -> set[int]:
+        """Op indices participating in loop-carried cycles within ``ops``."""
+        succ = self._slice_graph(ops)
+        return nodes_in_cycles(list(succ.keys()), succ)
+
+    def count_simple_cycles(self, ops: Sequence[ir.Op],
+                            limit: int = 64) -> int:
+        """Johnson-style simple-cycle count for the backward slice — the
+        paper's Fig 3b/5 reporting metric (it uses networkx for this)."""
+        from .graphs import simple_cycles
+        succ = self._slice_graph(ops)
+        return sum(1 for _ in simple_cycles(list(succ.keys()), succ,
+                                            limit=limit))
+
+    def _slice_graph(self, ops: Sequence[ir.Op]) -> dict[int, list[int]]:
+        opset = {op.idx: op for op in ops}
+        consumers: dict[int, list[int]] = {}
+        for op in ops:
+            for a in op.in_ids():
+                consumers.setdefault(a, []).append(op.idx)
+        succ: dict[int, list[int]] = {op.idx: [] for op in ops}
+        for op in ops:
+            for o in op.outs:
+                succ[op.idx].extend(consumers.get(o, ()))
+        for p, cid in enumerate(self.carry_in_ids):
+            atom = self.carry_out_atoms[p]
+            if not isinstance(atom, int):
+                continue
+            prod = self.fn.producer.get(atom)
+            if prod is not None and prod.idx in opset:
+                succ[prod.idx].extend(consumers.get(cid, ()))
+        return succ
+
+    # -- classification ------------------------------------------------------
+    def classify_index(self, op: ir.Op) -> tuple[str, list[ir.Op], set[int], list]:
+        reasons = []
+        roots = []
+        for atom in _index_atoms(op):
+            if isinstance(atom, int) and not self._is_const_atom(atom):
+                roots.append(atom)
+        if not roots:
+            return CONSTANT, [], set(), ["all index operands loop-invariant"]
+        ops, carries = self.closed_slice(roots)
+        free = ir.slice_free_inputs(self.fn, ops, roots)
+        uses_xs = bool(free & self.xs_ids) or any(
+            r in self.xs_ids for r in roots)
+        has_load = any(o.name in LOAD_PRIMS for o in ops)
+        affine = self.slice_is_affine(ops)
+        if uses_xs:
+            reasons.append("index streamed from loop data (xs)")
+        if has_load:
+            reasons.append("index produced by another load")
+        if not affine:
+            bad = [o.name for o in ops
+                   if o.name not in AFFINE_PRIMS and o.name not in SCALE_PRIMS]
+            reasons.append(f"nonlinear index computation: {sorted(set(bad))[:6]}")
+        if not uses_xs and not has_load and affine:
+            return STRIDING, ops, carries, ["affine recurrence"]
+        return IRREGULAR, ops, carries, reasons
+
+    def control_independent(self, ops: Sequence[ir.Op]) -> tuple[bool, list]:
+        """No divergent control flow in the index slice.
+
+        ``select_n`` is *predication*: both arms are computed, so the
+        backward slice is identical regardless of the predicate — the
+        carrot simply duplicates the whole slice (dependent feeder loads
+        included; §2 "prefetching the entire dependency chain").  The
+        paper's binary-search-tree exclusion — the next address needs this
+        iteration's *loaded* value — surfaces in jaxpr dataflow as a
+        loop-carried cycle through the load and is caught by the
+        runnable/chasing check.  Genuine control divergence is only
+        ``cond``/``while``.
+        """
+        for op in ops:
+            if op.name in ("cond", "while"):
+                return False, [f"{op.name} in index slice"]
+        return True, []
+
+    def analyze(self, delinquent_bytes: int) -> LoopReport:
+        fn = self.fn
+        loads: list[LoadReport] = []
+        for op in fn.ops:
+            if op.name not in LOAD_PRIMS:
+                continue
+            idx_atoms = _index_atoms(op)
+            if all(self._is_const_atom(a) or isinstance(a, ir.Lit)
+                   for a in idx_atoms):
+                cls, ops, carries, reasons = CONSTANT, [], set(), []
+            else:
+                cls, ops, carries, reasons = self.classify_index(op)
+            shape, dtype, nbytes = _table_info(fn, op.invals[0])
+            delinquent = nbytes >= delinquent_bytes
+            if cls == IRREGULAR:
+                cyc = self.cycle_ops(ops)
+                chasing = [i for i in cyc
+                           if fn.ops[i].name in LOAD_PRIMS]
+                runnable = not chasing
+                if chasing:
+                    reasons.append(
+                        f"chasing: load op(s) {chasing} inside loop-carried cycle")
+                ctrl, ctrl_reasons = self.control_independent(ops)
+                reasons += ctrl_reasons
+                n_cyc = len(chasing)
+                n_simple = self.count_simple_cycles(ops)
+                if n_simple:
+                    reasons.append(f"{n_simple} simple cycle(s) in slice")
+            else:
+                runnable, ctrl, n_cyc = True, True, 0
+            loads.append(LoadReport(
+                op_idx=op.idx, prim=op.name, table_shape=shape,
+                table_dtype=dtype, table_bytes=nbytes, index_class=cls,
+                delinquent=delinquent, runnable=runnable,
+                control_independent=ctrl,
+                prefetchable=(cls == IRREGULAR and delinquent and runnable
+                              and ctrl),
+                n_cycles_with_loads=n_cyc, reasons=reasons))
+        self._coalesce(loads)
+        return LoopReport(fn, self.carry_in_ids, self.carry_out_atoms,
+                          sorted(self.xs_ids), self.stable_ids, loads)
+
+    # -- coalescing (same-cache-line rule, §4.1) -----------------------------
+    # The paper coalesces loads whose addresses sit a small constant
+    # offset apart, via its dynamic traces.  We do the same dynamically:
+    # run the loop body concretely for a few iterations on synthesized
+    # inputs and group loads whose observed indices differ by a constant
+    # within the line window.  (Structural matching cannot see through
+    # jnp.take's branchless negative-index wrap; profiling can — and is
+    # what the paper actually does.)
+    COALESCE_WINDOW = 16
+    _COALESCE_ITERS = 4
+
+    def _synth(self, vid):
+        aval = self.fn.avals.get(vid)
+        rng = np.random.default_rng(vid)
+        if aval is None:
+            return np.int32(1)
+        dt = np.dtype(aval.dtype)
+        if np.issubdtype(dt, np.integer):
+            return rng.integers(1, 97, size=aval.shape).astype(dt)
+        if dt == np.bool_:
+            return np.zeros(aval.shape, dt)
+        return rng.uniform(0.5, 1.5, size=aval.shape).astype(dt)
+
+    def _profile_indices(self, ops_of_interest) -> dict[int, list[int]] | None:
+        fn = self.fn
+        try:
+            carry = [self._synth(c) for c in self.carry_in_ids]
+            trace: dict[int, list[int]] = {o.idx: [] for o in ops_of_interest}
+            for it in range(self._COALESCE_ITERS):
+                env = dict(zip(self.carry_in_ids, carry))
+                for x in self.xs_ids:
+                    env[x] = self._synth(x + 1000 * it)
+                fn.eval_ops(env, fn.ops)
+                for o in ops_of_interest:
+                    v = fn._read(env, _index_atoms(o)[0])
+                    trace[o.idx].append(int(np.asarray(v).reshape(-1)[0]))
+                carry = [np.asarray(fn._read(env, a))
+                         for a in self.fn.outvals[:len(carry)]]
+            return trace
+        except Exception:       # synthesized inputs hit a numeric edge
+            return None
+
+    def _coalesce(self, loads: list[LoadReport]) -> None:
+        cands = [l for l in loads if l.prefetchable]
+        if not cands:
+            return
+        if len(cands) == 1:
+            cands[0].critical = True
+            return
+        ops = [self.fn.ops[l.op_idx] for l in cands]
+        trace = self._profile_indices(ops)
+        parent = list(range(len(cands)))
+
+        def find(i):
+            while parent[i] != i:
+                parent[i] = parent[parent[i]]
+                i = parent[i]
+            return i
+
+        if trace is not None:
+            for i in range(len(cands)):
+                for j in range(i + 1, len(cands)):
+                    a = np.asarray(trace[cands[i].op_idx])
+                    b = np.asarray(trace[cands[j].op_idx])
+                    d = b - a
+                    if (d == d[0]).all() and abs(int(d[0])) <= \
+                            self.COALESCE_WINDOW:
+                        parent[find(j)] = find(i)
+        groups: dict[int, list[LoadReport]] = {}
+        for i, l in enumerate(cands):
+            l.group_root = find(i)
+            groups.setdefault(find(i), []).append(l)
+        for members in groups.values():
+            best = max(members, key=lambda l: l.table_bytes)
+            best.critical = True
+            for m in members:
+                if m is not best:
+                    m.reasons.append(
+                        f"coalesced into critical load op{best.op_idx}")
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FlatLoopBody:
+    """A flattened scan body plus the pytree metadata to rebuild it."""
+    fn: ir.FlatFn
+    carry_tree: Any
+    x_tree: Any
+    y_tree: Any
+    n_carry: int
+    n_x: int
+
+
+def flatten_loop_body(body_fn: Callable, init_carry, x_example) -> FlatLoopBody:
+    import jax.tree_util as jtu
+    carry_flat, carry_tree = jtu.tree_flatten(init_carry)
+    x_flat, x_tree = jtu.tree_flatten(x_example)
+    y_tree_box = {}
+
+    def flat_body(*flat):
+        c = jtu.tree_unflatten(carry_tree, flat[:len(carry_flat)])
+        x = jtu.tree_unflatten(x_tree, flat[len(carry_flat):])
+        new_c, y = body_fn(c, x)
+        new_c_flat, new_tree = jtu.tree_flatten(new_c)
+        assert new_tree == carry_tree, "carry structure must be invariant"
+        y_flat, y_tree = jtu.tree_flatten(y)
+        y_tree_box["tree"] = y_tree
+        return (*new_c_flat, *y_flat)
+
+    closed = jax.make_jaxpr(flat_body)(*carry_flat, *x_flat)
+    fn = ir.flatten_closed_jaxpr(closed)
+    return FlatLoopBody(fn, carry_tree, x_tree, y_tree_box["tree"],
+                        len(carry_flat), len(x_flat))
+
+
+def screen_body(body: FlatLoopBody, *,
+                delinquent_bytes: int = 4 * 2**20) -> LoopReport:
+    fn, n_c = body.fn, body.n_carry
+    analysis = _LoopAnalysis(
+        fn,
+        carry_in_ids=fn.invars[:n_c],
+        carry_out_atoms=fn.outvals[:n_c],
+        xs_ids=fn.invars[n_c:],
+        stable_ids=set(),
+    )
+    return analysis.analyze(delinquent_bytes)
+
+
+def screen_loop(body_fn: Callable, init_carry, x_example, *,
+                delinquent_bytes: int = 4 * 2**20) -> LoopReport:
+    """Screen a scan-style ``body_fn(carry, x) -> (carry, y)``."""
+    return screen_body(flatten_loop_body(body_fn, init_carry, x_example),
+                       delinquent_bytes=delinquent_bytes)
+
+
+def screen_scan_eqn(closed_body: jcore.ClosedJaxpr, num_consts: int,
+                    num_carry: int, *,
+                    delinquent_bytes: int = 4 * 2**20) -> LoopReport:
+    """Screen the body jaxpr of a traced ``lax.scan`` equation."""
+    fn = ir.flatten_closed_jaxpr(closed_body)
+    analysis = _LoopAnalysis(
+        fn,
+        carry_in_ids=fn.invars[num_consts:num_consts + num_carry],
+        carry_out_atoms=fn.outvals[:num_carry],
+        xs_ids=fn.invars[num_consts + num_carry:],
+        stable_ids=set(fn.invars[:num_consts]),
+    )
+    return analysis.analyze(delinquent_bytes)
+
+
+def delta_histogram(report: LoopReport, load: LoadReport, init_carry,
+                    xs, n_iters: int = 256) -> dict[int, int]:
+    """Dynamic address-delta histogram for one load (paper §4.1).
+
+    Runs the loop body concretely for ``n_iters`` iterations, recording the
+    load's index operand each iteration, and returns ``{delta: count}``.
+    The paper's irregularity rule — at least 10 distinct deltas covering
+    the top 90 % of executions — is exposed via :func:`is_irregular_deltas`.
+    """
+    import jax.tree_util as jtu
+    fn = report.flat
+    op = fn.ops[load.op_idx]
+    idx_atoms = _index_atoms(op)
+    carry_vals = [np.asarray(v) for v in jtu.tree_leaves(init_carry)]
+    xs_leaves = jtu.tree_leaves(xs)
+    n = min(n_iters, xs_leaves[0].shape[0] if xs_leaves else n_iters)
+    seen: list[int] = []
+    for i in range(n):
+        x_vals = [np.asarray(l)[i] for l in xs_leaves]
+        env = dict(zip(fn.invars, list(carry_vals) + x_vals))
+        fn.eval_ops(env, fn.ops)
+        idx_val = np.asarray(fn._read(env, idx_atoms[0])).reshape(-1)[0]
+        seen.append(int(idx_val))
+        carry_vals = [fn._read(env, a) for a in
+                      fn.outvals[:len(carry_vals)]]
+    deltas = np.diff(np.asarray(seen))
+    hist: dict[int, int] = {}
+    for d in deltas:
+        hist[int(d)] = hist.get(int(d), 0) + 1
+    return hist
+
+
+def is_irregular_deltas(hist: dict[int, int], min_deltas: int = 10,
+                        coverage: float = 0.9) -> bool:
+    """Paper rule: >= ``min_deltas`` distinct deltas cover ``coverage``."""
+    if not hist:
+        return False
+    total = sum(hist.values())
+    counts = sorted(hist.values(), reverse=True)
+    acc, k = 0, 0
+    for c in counts:
+        acc += c
+        k += 1
+        if acc >= coverage * total:
+            break
+    return k >= min_deltas
+
+
+def screen(f: Callable, *example_args,
+           delinquent_bytes: int = 4 * 2**20) -> dict[str, LoopReport]:
+    """Screen every ``lax.scan`` loop inside a traced function.
+
+    Analogue of the paper's whole-trace pipeline: find loops, screen each.
+    Returns ``{loop_name: LoopReport}`` keyed by ``scan[i]`` position.
+    """
+    closed = jax.make_jaxpr(f)(*example_args)
+    out: dict[str, LoopReport] = {}
+    counter = [0]
+
+    def visit(jaxpr: jcore.Jaxpr):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name == "scan":
+                body = eqn.params["jaxpr"]
+                out[f"scan{counter[0]}"] = screen_scan_eqn(
+                    body, eqn.params["num_consts"], eqn.params["num_carry"],
+                    delinquent_bytes=delinquent_bytes)
+                counter[0] += 1
+                visit(body.jaxpr)
+            else:
+                sub = ir._sub_jaxpr(eqn)
+                if sub is not None:
+                    visit(sub.jaxpr)
+                if name == "cond":
+                    for br in eqn.params.get("branches", ()):
+                        visit(br.jaxpr)
+                if name == "while":
+                    visit(eqn.params["body_jaxpr"].jaxpr)
+    visit(closed.jaxpr)
+    return out

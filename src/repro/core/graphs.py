@@ -1,0 +1,98 @@
+"""Tiny dependency-free graph utilities for the DIL screen.
+
+The paper enumerates simple cycles of the backward slice (Johnson's
+algorithm via networkx).  For the *screen* itself only membership of a
+load in *some* cycle matters, which is equivalent to membership in a
+non-trivial strongly connected component — so the core uses Tarjan SCC
+and stays dependency-free.  ``simple_cycles`` (Johnson) is provided for
+the Table-2 style reporting benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Hashable, Iterable, Iterator
+
+
+def tarjan_scc(nodes: Iterable[Hashable],
+               succ: dict[Hashable, list[Hashable]]) -> list[list[Hashable]]:
+    """Iterative Tarjan strongly-connected components."""
+    index: dict = {}
+    low: dict = {}
+    on_stack: set = set()
+    stack: list = []
+    sccs: list[list] = []
+    counter = [0]
+
+    for root in nodes:
+        if root in index:
+            continue
+        work = [(root, iter(succ.get(root, ())))]
+        index[root] = low[root] = counter[0]
+        counter[0] += 1
+        stack.append(root)
+        on_stack.add(root)
+        while work:
+            v, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    on_stack.add(w)
+                    work.append((w, iter(succ.get(w, ()))))
+                    advanced = True
+                    break
+                elif w in on_stack:
+                    low[v] = min(low[v], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[v])
+            if low[v] == index[v]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on_stack.discard(w)
+                    comp.append(w)
+                    if w == v:
+                        break
+                sccs.append(comp)
+    return sccs
+
+
+def nodes_in_cycles(nodes: Iterable[Hashable],
+                    succ: dict[Hashable, list[Hashable]]) -> set[Hashable]:
+    """Nodes that belong to at least one directed cycle."""
+    nodes = list(nodes)
+    out: set = set()
+    for comp in tarjan_scc(nodes, succ):
+        if len(comp) > 1:
+            out.update(comp)
+        else:
+            v = comp[0]
+            if v in succ.get(v, ()):  # self loop
+                out.add(v)
+    return out
+
+
+def simple_cycles(nodes: Iterable[Hashable],
+                  succ: dict[Hashable, list[Hashable]],
+                  limit: int = 10000) -> Iterator[list[Hashable]]:
+    """Johnson-style simple cycle enumeration (via networkx if present)."""
+    try:
+        import networkx as nx
+        g = nx.DiGraph()
+        g.add_nodes_from(nodes)
+        for u, vs in succ.items():
+            for v in vs:
+                g.add_edge(u, v)
+        for i, cyc in enumerate(nx.simple_cycles(g)):
+            if i >= limit:
+                return
+            yield cyc
+    except ImportError:  # pragma: no cover - networkx is installed here
+        for comp in tarjan_scc(nodes, succ):
+            if len(comp) > 1 or comp[0] in succ.get(comp[0], ()):
+                yield comp

@@ -1,0 +1,237 @@
+"""Flat dataflow IR over jaxprs.
+
+The paper's analysis operates on x86 machine code: a flat instruction
+stream whose dataflow (through registers/memory) is recovered by dynamic
+slicing.  Our analogue of "machine code" is the jaxpr.  jnp-level ops,
+however, trace to *nested* ``jit`` equations (e.g. ``jnp.take`` hides its
+``gather`` inside a ``jit[name=_take]`` call), so before any dataflow
+analysis we inline call-like equations into a flat list of atomic ops —
+the moral equivalent of disassembling through call boundaries, which is
+exactly what the paper's pintool-based slicing does.
+
+The IR is deliberately tiny:
+
+* values are integer ids (``VarId``); literals/consts are bound in an
+  environment at build time,
+* an :class:`Op` is one atomic primitive application,
+* :class:`FlatFn` is the flattened function: ordered ops + input ids +
+  output atoms + a constant environment.
+
+``FlatFn.eval`` re-executes any subset of the ops via ``Primitive.bind``
+(the same mechanism as ``jax.core.eval_jaxpr``), which is how the carrot
+(backward slice) and the horse (main body with the load's result
+injected) are materialised as runnable JAX callables in
+:mod:`repro.core.pipeline`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+from jax.extend import core as jcore
+
+# Call-like primitives that are transparently inlined.  Structured control
+# flow (scan/while/cond) stays atomic: it is the analogue of a nested loop
+# or a branch in the paper's CFG and is handled by the screen itself.
+_INLINE_PRIMS = ("jit", "pjit", "closed_call", "core_call", "custom_jvp_call",
+                 "custom_vjp_call", "remat", "checkpoint", "custom_vjp_call_jaxpr")
+
+CONTROL_PRIMS = ("cond", "while", "scan")
+
+VarId = int
+
+
+@dataclasses.dataclass(frozen=True)
+class Lit:
+    """An inline literal operand (scalar literals in jaxprs)."""
+    val: Any
+
+
+@dataclasses.dataclass
+class Op:
+    prim: Any                 # jax Primitive
+    invals: list[Any]         # VarId | Lit
+    outs: list[VarId]
+    params: dict
+    # index into FlatFn.ops — filled by FlatFn
+    idx: int = -1
+
+    @property
+    def name(self) -> str:
+        return self.prim.name
+
+    def in_ids(self) -> list[VarId]:
+        return [a for a in self.invals if isinstance(a, int)]
+
+
+class FlatFn:
+    """A flattened jaxpr: atomic ops in topological order."""
+
+    def __init__(self) -> None:
+        self.ops: list[Op] = []
+        self.n_vars: int = 0
+        self.invars: list[VarId] = []
+        self.outvals: list[Any] = []          # VarId | Lit
+        self.const_env: dict[VarId, Any] = {} # VarId -> concrete array
+        self.avals: dict[VarId, Any] = {}     # VarId -> aval
+        self.producer: dict[VarId, Op] = {}
+
+    # -- construction ------------------------------------------------------
+    def fresh(self, aval=None) -> VarId:
+        vid = self.n_vars
+        self.n_vars += 1
+        if aval is not None:
+            self.avals[vid] = aval
+        return vid
+
+    def add_op(self, prim, invals, out_avals, params) -> list[VarId]:
+        outs = [self.fresh(a) for a in out_avals]
+        op = Op(prim, list(invals), outs, dict(params), idx=len(self.ops))
+        self.ops.append(op)
+        for o in outs:
+            self.producer[o] = op
+        return outs
+
+    # -- evaluation --------------------------------------------------------
+    def _read(self, env: dict, atom) -> Any:
+        if isinstance(atom, Lit):
+            return atom.val
+        if atom in env:
+            return env[atom]
+        if atom in self.const_env:
+            return self.const_env[atom]
+        raise KeyError(f"unbound var id {atom}")
+
+    def eval_ops(self, env: dict, ops: Sequence[Op],
+                 inject: dict[int, Any] | None = None) -> dict:
+        """Execute ``ops`` in order, updating ``env`` in place.
+
+        ``inject`` maps op.idx -> value(s): instead of executing that op,
+        bind its outputs to the given value(s).  This is how the horse
+        receives the prefetched load value.
+        """
+        inject = inject or {}
+        for op in ops:
+            if op.idx in inject:
+                vals = inject[op.idx]
+                if not isinstance(vals, (list, tuple)):
+                    vals = [vals]
+                for o, v in zip(op.outs, vals):
+                    env[o] = v
+                continue
+            invals = [self._read(env, a) for a in op.invals]
+            out = op.prim.bind(*invals, **op.params)
+            if not op.prim.multiple_results:
+                out = [out]
+            for o, v in zip(op.outs, out):
+                env[o] = v
+        return env
+
+    def eval(self, *args, ops: Sequence[Op] | None = None,
+             inject: dict[int, Any] | None = None) -> list[Any]:
+        assert len(args) == len(self.invars), (len(args), len(self.invars))
+        env = dict(zip(self.invars, args))
+        self.eval_ops(env, self.ops if ops is None else ops, inject)
+        return [self._read(env, a) for a in self.outvals]
+
+
+def _sub_jaxpr(eqn) -> jcore.ClosedJaxpr | None:
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        sub = eqn.params.get(key)
+        if sub is not None:
+            if isinstance(sub, jcore.Jaxpr):
+                sub = jcore.ClosedJaxpr(sub, ())
+            return sub
+    return None
+
+
+def flatten_closed_jaxpr(closed: jcore.ClosedJaxpr) -> FlatFn:
+    """Recursively inline call-like eqns into a flat op list."""
+    fn = FlatFn()
+
+    def bind_const(val, aval) -> VarId:
+        vid = fn.fresh(aval)
+        fn.const_env[vid] = val
+        return vid
+
+    def go(jaxpr: jcore.Jaxpr, consts, in_atoms: list[Any]) -> list[Any]:
+        env: dict[Any, Any] = {}          # jax Var -> VarId | Lit
+        for var, atom in zip(jaxpr.invars, in_atoms):
+            env[var] = atom
+        for var, val in zip(jaxpr.constvars, consts):
+            env[var] = bind_const(val, var.aval)
+
+        def read(v):
+            if isinstance(v, jcore.Literal):
+                return Lit(v.val)
+            return env[v]
+
+        for eqn in jaxpr.eqns:
+            sub = _sub_jaxpr(eqn) if eqn.primitive.name in _INLINE_PRIMS else None
+            invals = [read(v) for v in eqn.invars]
+            if sub is not None:
+                outs = go(sub.jaxpr, sub.consts, invals)
+                for var, atom in zip(eqn.outvars, outs):
+                    env[var] = atom
+            else:
+                out_ids = fn.add_op(eqn.primitive, invals,
+                                    [v.aval for v in eqn.outvars], eqn.params)
+                for var, vid in zip(eqn.outvars, out_ids):
+                    env[var] = vid
+        return [read(v) for v in jaxpr.outvars]
+
+    in_ids = [fn.fresh(v.aval) for v in closed.jaxpr.invars]
+    fn.invars = in_ids
+    fn.outvals = go(closed.jaxpr, closed.consts, list(in_ids))
+    return fn
+
+
+def flatten_fn(f: Callable, *example_args) -> tuple[FlatFn, Any]:
+    """Trace ``f`` and flatten.  Returns (FlatFn, out_tree)."""
+    import jax.tree_util as jtu
+    flat_args, in_tree = jtu.tree_flatten(example_args)
+    out_tree_box = {}
+
+    def wrapped(*flat):
+        args = jtu.tree_unflatten(in_tree, flat)
+        out = f(*args)
+        out_flat, out_tree = jtu.tree_flatten(out)
+        out_tree_box["tree"] = out_tree
+        return out_flat
+
+    closed = jax.make_jaxpr(wrapped)(*flat_args)
+    return flatten_closed_jaxpr(closed), out_tree_box["tree"]
+
+
+def backward_slice(fn: FlatFn, roots: Sequence[VarId],
+                   stop: Sequence[VarId] = ()) -> list[Op]:
+    """All ops contributing to ``roots``, in topological (original) order.
+
+    ``stop`` vars are treated as free inputs (slicing does not cross them).
+    """
+    stop_set = set(stop)
+    needed: set[VarId] = set(r for r in roots if r not in stop_set)
+    marked: set[int] = set()
+    for op in reversed(fn.ops):
+        if any(o in needed for o in op.outs):
+            marked.add(op.idx)
+            for a in op.in_ids():
+                if a not in stop_set:
+                    needed.add(a)
+    return [op for op in fn.ops if op.idx in marked]
+
+
+def slice_free_inputs(fn: FlatFn, ops: Sequence[Op],
+                      roots: Sequence[VarId]) -> set[VarId]:
+    """Ids read by the slice but not produced inside it (its live-ins)."""
+    produced = {o for op in ops for o in op.outs}
+    free: set[VarId] = set()
+    for op in ops:
+        for a in op.in_ids():
+            if a not in produced and a not in fn.const_env:
+                free.add(a)
+    for r in roots:
+        if r not in produced and r not in fn.const_env:
+            free.add(r)
+    return free

@@ -1,0 +1,273 @@
+"""Carrot-and-horse inline prefetch transform (paper §4, Fig. 6).
+
+Given a scan loop whose body contains a *prefetchable* DIL (per
+:mod:`repro.core.dil`), rewrite it so that a duplicated copy of the DIL's
+backward slice (the **carrot**) runs ``k`` iterations ahead of the main
+computation (the **horse**) and performs the load early, while the horse
+consumes the value loaded ``k`` iterations ago from a ring buffer.
+
+Phase mapping (paper -> here):
+
+* **save**       — the carrot gets its own carry slots in the rewritten
+                   scan state (fresh "registers"); nothing to spill.
+* **head start** — a length-``k`` warm-up scan runs the carrot alone and
+                   fills the ``k``-deep ring buffer of loaded values.
+* **stay ahead** — the main scan: at step ``i`` the horse consumes
+                   ``ring[i % k]`` (the value for iteration ``i``), the
+                   carrot computes the index for iteration ``i + k``,
+                   performs that load, and overwrites ``ring[i % k]``.
+* **join**       — for ``i + k >= n`` the carrot's loads land in ring
+                   slots that are never read again; indices may run off
+                   the end of the data (the x-stream is wrapped), which
+                   is harmless: those values are dead.
+* **restore**    — the carrot state is simply dropped from the final
+                   carry.
+
+The rewritten loop is **bit-exact** with ``lax.scan(body_fn, init, xs)``:
+the horse executes the original body unchanged except that the target
+load's result is injected, and the injected value is produced by an exact
+duplicate of the original index computation.
+
+On TPU, the mechanism by which this wins is the same as the paper's: the
+load for iteration ``i + k`` has no data dependence on iteration ``i``'s
+compute, so the scheduler overlaps the (HBM round-trip) gather with
+compute — the pure-JAX analogue of issuing ``prefetcht0`` ``k``
+iterations early.  The Pallas kernels in :mod:`repro.kernels` implement
+the same schedule with explicit async DMA for the cases where we control
+the kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+from jax import lax
+
+from . import dil, ir
+
+
+# ---------------------------------------------------------------------------
+# Manual API: the user supplies the carrot/gather/horse split.
+# ---------------------------------------------------------------------------
+
+def pipelined_scan(carrot_fn: Callable, gather_fn: Callable,
+                   horse_fn: Callable, init_carrot, init_carry, xs,
+                   *, prefetch_distance: int, length: int | None = None,
+                   carrot_xs=None):
+    """Software-pipelined scan with an explicit carrot/horse split.
+
+    ``carrot_fn(carrot_state, x) -> (carrot_state', index)``
+    ``gather_fn(index) -> value``                (the DIL, hoisted)
+    ``horse_fn(carry, x, value) -> (carry', y)`` (original body, value injected)
+
+    Semantically equal to::
+
+        def body(c, x):
+            s, idx = carrot... ; v = gather_fn(idx); return horse_fn(c, x, v)
+        lax.scan(body, init_carry, xs)
+
+    but with the gather running ``prefetch_distance`` iterations ahead.
+    ``carrot_xs`` optionally provides a different x-stream for the carrot
+    (defaults to ``xs`` rolled by ``k``, wrapping — the join-phase values
+    are dead so wrapping is safe).
+    """
+    xs_leaves = jtu.tree_leaves(xs)
+    if length is None:
+        if not xs_leaves:
+            raise ValueError("length required when xs is None")
+        length = xs_leaves[0].shape[0]
+    n = int(length)
+    k = max(1, min(int(prefetch_distance), n))
+
+    if carrot_xs is None and xs_leaves:
+        carrot_xs = jtu.tree_map(lambda a: jnp.roll(a, -k, axis=0), xs)
+
+    def take_prefix(tree, lo, hi):
+        return jtu.tree_map(lambda a: a[lo:hi], tree)
+
+    # ---- head start: fill the ring ---------------------------------------
+    def warm_step(state, x):
+        state, idx = carrot_fn(state, x)
+        return state, idx
+
+    warm_xs = take_prefix(xs, 0, k) if xs_leaves else None
+    carrot_state, warm_idx = lax.scan(warm_step, init_carrot, warm_xs,
+                                      length=k)
+    ring = jax.vmap(gather_fn)(warm_idx)          # [k, ...] loaded values
+
+    # ---- stay ahead + join ------------------------------------------------
+    iters = jnp.arange(n, dtype=jnp.int32)
+
+    def step(state, inp):
+        carry, cstate, ring = state
+        i, x, x_ahead = inp
+        slot = lax.rem(i, jnp.int32(k))
+        value = jtu.tree_map(
+            lambda r: lax.dynamic_index_in_dim(r, slot, keepdims=False), ring)
+        cstate, idx_ahead = carrot_fn(cstate, x_ahead)
+        v_ahead = gather_fn(idx_ahead)
+        ring = jtu.tree_map(
+            lambda r, v: lax.dynamic_update_index_in_dim(r, v, slot, axis=0),
+            ring, v_ahead)
+        carry, y = horse_fn(carry, x, value)
+        return (carry, cstate, ring), y
+
+    scan_xs = (iters, xs, carrot_xs) if xs_leaves else (iters, xs, xs)
+    (carry, _, _), ys = lax.scan(step, (init_carry, carrot_state, ring),
+                                 scan_xs, length=n)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Automatic API: split derived from the DIL screen.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PrefetchPlan:
+    body: dil.FlatLoopBody
+    report: dil.LoopReport
+    target: dil.LoadReport
+    slice_ops: list          # carrot ops
+    carry_positions: list    # carry slots the carrot owns copies of
+    index_atoms: list        # atoms holding the load's index operand(s)
+    table_ops: list = dataclasses.field(default_factory=list)
+    # ops producing the (loop-invariant) table operand, e.g. a column
+    # slice of a closed-over array; evaluated inside gather_fn and
+    # hoisted out of the loop by XLA LICM
+
+    def describe(self) -> str:
+        return (f"target=op{self.target.op_idx} ({self.target.prim}, "
+                f"table={self.target.table_shape}) "
+                f"carrot_ops={len(self.slice_ops)} "
+                f"carrot_carries={self.carry_positions}")
+
+
+def plan_prefetch(body_fn: Callable, init_carry, x_example, *,
+                  target_op: int | None = None,
+                  delinquent_bytes: int = 4 * 2**20) -> PrefetchPlan:
+    """Run the DIL screen and build the carrot extraction plan."""
+    body = dil.flatten_loop_body(body_fn, init_carry, x_example)
+    report = dil.screen_body(body, delinquent_bytes=delinquent_bytes)
+    if target_op is not None:
+        cands = [l for l in report.loads if l.op_idx == target_op]
+        if not cands or not cands[0].prefetchable:
+            raise ValueError(f"op {target_op} is not a prefetchable DIL:\n"
+                             + report.summary())
+        target = cands[0]
+    else:
+        crit = report.critical_targets
+        if not crit:
+            raise ValueError("no prefetchable DIL found:\n" + report.summary())
+        target = max(crit, key=lambda l: l.table_bytes)
+
+    fn = body.fn
+    op = fn.ops[target.op_idx]
+    analysis = dil._LoopAnalysis(
+        fn, carry_in_ids=fn.invars[:body.n_carry],
+        carry_out_atoms=fn.outvals[:body.n_carry],
+        xs_ids=fn.invars[body.n_carry:], stable_ids=set())
+    idx_atoms = dil._index_atoms(op)
+    roots = [a for a in idx_atoms if isinstance(a, int)]
+    slice_ops, carries = analysis.closed_slice(roots)
+    # The load's table operand must be loop-INVARIANT (the paper's
+    # "statically inferable store addresses" restriction) but may be
+    # *computed* from consts (e.g. a column slice of a closed-over
+    # array); those ops are hoisted into gather_fn.
+    table_atom = op.invals[0]
+    table_ops: list = []
+    if isinstance(table_atom, int) and table_atom not in fn.const_env:
+        table_ops = ir.backward_slice(fn, [table_atom])
+        free = ir.slice_free_inputs(fn, table_ops, [table_atom])
+        varying = free & (set(fn.invars))
+        if varying:
+            raise ValueError(
+                "table operand depends on loop state; cannot hoist load")
+    return PrefetchPlan(body, report, target, slice_ops, sorted(carries),
+                        idx_atoms, table_ops)
+
+
+def _build_callables(plan: PrefetchPlan):
+    fn = plan.body.fn
+    n_c = plan.body.n_carry
+    carry_ids = fn.invars[:n_c]
+    xs_ids = fn.invars[n_c:]
+    op = fn.ops[plan.target.op_idx]
+    pos = plan.carry_positions
+
+    def carrot_fn(cstate, x_flat):
+        env = {}
+        for p, v in zip(pos, cstate):
+            env[carry_ids[p]] = v
+        for vid, v in zip(xs_ids, x_flat or ()):
+            env[vid] = v
+        fn.eval_ops(env, plan.slice_ops)
+        idx = tuple(fn._read(env, a) for a in plan.index_atoms)
+        new_state = tuple(fn._read(env, fn.outvals[p]) for p in pos)
+        return new_state, idx
+
+    def gather_fn(idx):
+        env = {}
+        for a, v in zip(plan.index_atoms, idx):
+            if isinstance(a, int):
+                env[a] = v
+        fn.eval_ops(env, list(plan.table_ops) + [op])
+        assert len(op.outs) == 1, "multi-output loads unsupported"
+        return env[op.outs[0]]
+
+    def horse_fn(carry_flat, x_flat, value):
+        env = dict(zip(carry_ids, carry_flat))
+        env.update(zip(xs_ids, x_flat or ()))
+        fn.eval_ops(env, fn.ops, inject={op.idx: value})
+        outs = [fn._read(env, a) for a in fn.outvals]
+        return tuple(outs[:n_c]), tuple(outs[n_c:])
+
+    def init_carrot_from(carry_flat):
+        return tuple(carry_flat[p] for p in pos)
+
+    return carrot_fn, gather_fn, horse_fn, init_carrot_from
+
+
+def prefetch_scan(body_fn: Callable, init_carry, xs, *,
+                  prefetch_distance: int = 8,
+                  target_op: int | None = None,
+                  delinquent_bytes: int = 4 * 2**20,
+                  length: int | None = None):
+    """Drop-in replacement for ``lax.scan(body_fn, init, xs)`` that
+    automatically extracts and pipelines the critical prefetchable DIL.
+
+    Raises ``ValueError`` if the screen finds no prefetchable DIL (i.e.
+    the loop is either regular — leave it to the hardware pipeline — or
+    chasing/control-dependent — the paper's own exclusions).
+    """
+    x_example = jtu.tree_map(lambda a: a[0], xs) if xs is not None else None
+    plan = plan_prefetch(body_fn, init_carry, x_example,
+                         target_op=target_op,
+                         delinquent_bytes=delinquent_bytes)
+    carrot_fn, gather_fn, horse_fn, init_carrot_from = _build_callables(plan)
+
+    carry_flat, carry_tree = jtu.tree_flatten(init_carry)
+    x_leaves_tree = None
+    if xs is not None:
+        xs_flat, xs_tree = jtu.tree_flatten(xs)
+        x_leaves_tree = xs_tree
+    else:
+        xs_flat = []
+
+    def carrot_flat(cstate, x_flat):
+        return carrot_fn(cstate, x_flat)
+
+    def horse_flat(carry, x_flat, value):
+        return horse_fn(carry, x_flat, value)
+
+    carry, ys_flat = pipelined_scan(
+        carrot_flat, gather_fn, horse_flat,
+        init_carrot_from(carry_flat), tuple(carry_flat),
+        tuple(xs_flat) if xs_flat else None,
+        prefetch_distance=prefetch_distance, length=length)
+
+    final_carry = jtu.tree_unflatten(carry_tree, list(carry))
+    ys = jtu.tree_unflatten(plan.body.y_tree, list(ys_flat))
+    return final_carry, ys

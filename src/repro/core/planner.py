@@ -1,0 +1,76 @@
+"""Prefetch-distance planning (the paper's statically-controlled ``k``).
+
+The paper picks ``k`` empirically by sweeping powers of two and observes
+(§5.2.2) that speedup is stable once the lookahead clears the dynamic
+instruction window, and that over-large ``k`` loses opportunity when the
+loop trip count is small.  On TPU the same trade-off is governed by
+hardware constants we can napkin-math directly:
+
+* the prefetch must hide one HBM round trip:   ``k >= latency / t_iter``
+* the ring must fit the VMEM budget:           ``k * row_bytes <= vmem``
+* lookahead beyond the trip count is wasted:   ``k <= trip_count``
+
+``plan_prefetch_distance`` returns the smallest power of two satisfying
+all three (powers of two for the paper's shift-not-multiply convenience;
+arbitrary ``k`` works everywhere in this codebase).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """TPU v5e per-chip constants (assignment-specified)."""
+    peak_flops: float = 197e12          # bf16 FLOP/s
+    hbm_bw: float = 819e9               # B/s
+    ici_bw: float = 50e9                # B/s per link
+    hbm_latency: float = 1.0e-6         # s, one async-copy round trip
+    vmem_bytes: int = 64 * 2**20        # usable VMEM budget (half of 128MiB)
+    hbm_bytes: int = 16 * 2**30         # v5e HBM capacity
+
+
+V5E = HardwareModel()
+
+
+def iter_time(flops_per_iter: float, hbm_bytes_per_iter: float,
+              hw: HardwareModel = V5E) -> float:
+    """Roofline execution time of one loop iteration (s)."""
+    return max(flops_per_iter / hw.peak_flops,
+               hbm_bytes_per_iter / hw.hbm_bw,
+               1e-9)
+
+
+def plan_prefetch_distance(row_bytes: int, flops_per_iter: float,
+                           hbm_bytes_per_iter: float, *,
+                           trip_count: int | None = None,
+                           hw: HardwareModel = V5E,
+                           power_of_two: bool = True,
+                           k_min: int = 2, k_max: int = 256) -> int:
+    """Choose the prefetch distance ``k``.
+
+    ``row_bytes``            bytes fetched per prefetch (one ring slot)
+    ``flops_per_iter``       compute per loop iteration
+    ``hbm_bytes_per_iter``   *regular* (already-pipelined) HBM traffic per
+                             iteration; the irregular row itself is excluded
+                             because it is exactly what we are hiding.
+    """
+    t = iter_time(flops_per_iter, hbm_bytes_per_iter, hw)
+    k_latency = math.ceil(hw.hbm_latency / t)
+    k_vmem = max(1, hw.vmem_bytes // max(row_bytes, 1))
+    k = max(k_min, k_latency)
+    k = min(k, k_vmem, k_max)
+    if trip_count is not None:
+        k = min(k, max(1, trip_count))
+    if power_of_two:
+        k = 1 << max(0, (k - 1).bit_length())
+        k = min(k, k_vmem, k_max)
+        if trip_count is not None:
+            while k > max(1, trip_count):
+                k //= 2
+    return max(1, k)
+
+
+def ring_bytes(row_bytes: int, k: int) -> int:
+    return row_bytes * k

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels implementing the paper's inline-prefetch schedule
+for the four DIL sites of the framework:
+
+* ``prefetch_gather``   — irregular row gather (embedding / MoE dispatch)
+* ``hash_probe``        — open-addressing probe (STLHistogram / HashJoin)
+* ``csr_gather``        — neighbor gather + mean (PageRank / Graph500)
+* ``paged_kv``          — paged-KV attention scores (decode serving)
+
+Each subpackage is ``kernel.py`` (pl.pallas_call + BlockSpec/DMA ring),
+``ops.py`` (jitted wrapper) and ``ref.py`` (pure-jnp oracle).  Kernels
+are validated bit-exactly in interpret mode on CPU; TPU v5e is the
+compile target.
+"""
+from .prefetch_gather import prefetch_gather, prefetch_gather_ref  # noqa: F401
+from .hash_probe import hash_probe, hash_probe_ref, build_table  # noqa: F401
+from .csr_gather import csr_gather_mean, csr_gather_mean_ref  # noqa: F401
+from .paged_kv import paged_attn_scores, paged_attn_scores_ref  # noqa: F401

@@ -1,0 +1,105 @@
+"""Shared machinery for the inline-prefetch Pallas kernels.
+
+Every kernel in this package is an instance of the paper's
+carrot-and-horse schedule transcribed to the TPU memory hierarchy:
+
+* the **carrot** is the index computation running ``lookahead`` grid
+  steps ahead, reading the scalar-prefetch operand (SMEM) — legal
+  precisely because the DIL screen proved the index stream *runnable*
+  (computable without the gathered data);
+* the **prefetch** is an explicit async DMA HBM->VMEM into a
+  ``lookahead``-deep ring of VMEM slots (the paper's scavenged
+  registers);
+* the **horse** is the compute consuming ring slot ``g % lookahead``;
+* **head start / stay ahead / join** are the ring warm-up at grid step
+  0, the steady-state slot recycling, and the tail steps that stop
+  issuing DMAs (``g + lookahead >= num_blocks``).
+
+``RowRing`` encapsulates the slot arithmetic so each kernel body stays
+readable.  All kernels validate bit-exactly against their ``ref.py``
+oracle under ``interpret=True`` (this container is CPU-only; TPU is the
+target).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+class RowRing:
+    """A k-deep ring of per-row async HBM->VMEM copies.
+
+    ``ring``  VMEM scratch of shape (lookahead, rows_per_block, *row_shape)
+    ``sems``  DMA semaphores of shape (lookahead, rows_per_block)
+    ``row_for(block, r)`` returns the dynamic source row index.
+    """
+
+    def __init__(self, table_ref, ring, sems, row_for, rows_per_block: int,
+                 lookahead: int):
+        self.table_ref = table_ref
+        self.ring = ring
+        self.sems = sems
+        self.row_for = row_for
+        self.rows_per_block = rows_per_block
+        self.lookahead = lookahead
+
+    def _copy(self, blk, slot, r):
+        row = self.row_for(blk, r)
+        return pltpu.make_async_copy(
+            self.table_ref.at[pl.ds(row, 1)],
+            self.ring.at[slot, pl.ds(r, 1)],
+            self.sems.at[slot, r],
+        )
+
+    def start_block(self, blk, slot):
+        for r in range(self.rows_per_block):
+            self._copy(blk, slot, r).start()
+
+    def wait_block(self, blk, slot):
+        for r in range(self.rows_per_block):
+            self._copy(blk, slot, r).wait()
+
+    def head_start(self, num_blocks):
+        """Issue the first ``lookahead`` blocks of DMAs (paper: head start)."""
+        @pl.when(pl.program_id(0) == 0)
+        def _():
+            for j in range(self.lookahead):
+                @pl.when(j < num_blocks)
+                def _():
+                    self.start_block(j, j)
+
+    def steady(self, g, num_blocks):
+        """Wait for block ``g``'s rows; pre-issue block ``g + lookahead``.
+
+        Returns the ring slot holding block ``g``.  Call
+        ``consume(slot)`` -> compute -> then ``advance``ing is implicit:
+        the next DMA into this slot is issued here *after* wait; the
+        caller must read the slot before the next grid step overwrites
+        it, which Pallas guarantees because grid steps are sequential on
+        a TPU core.
+        """
+        slot = jax.lax.rem(g, jnp.int32(self.lookahead))
+        self.wait_block(g, slot)
+        return slot
+
+    def stay_ahead(self, g, slot, num_blocks):
+        @pl.when(g + self.lookahead < num_blocks)
+        def _():
+            self.start_block(g + self.lookahead, slot)
+
+
+def pad_rows(x, multiple: int, axis: int = 0, fill=0):
+    """Pad ``x`` along ``axis`` to a multiple; returns (padded, orig_len)."""
+    n = x.shape[axis]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=fill), n

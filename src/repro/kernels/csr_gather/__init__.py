@@ -1,0 +1,2 @@
+from .ops import csr_gather_mean  # noqa: F401
+from .ref import csr_gather_mean_ref  # noqa: F401

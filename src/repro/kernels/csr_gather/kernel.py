@@ -1,0 +1,69 @@
+"""Inline-prefetch CSR neighbor gather + mean (PageRank/Graph500 analogue).
+
+One grid step owns one node; its ``max_deg`` neighbor rows are DMA'd by
+the carrot ``lookahead`` nodes ahead (the neighbor-id stream lives in
+SMEM via scalar prefetch — CSR adjacency is data, not a function of the
+gathered features, so the slice is runnable).  Padding ids (< 0) are
+clamped to row 0 for the DMA and masked out of the reduction — the DMA
+still moves a line, mirroring the paper's observation that prefetching
+must be *safe* on the join/overrun path rather than skipped.
+
+The horse reduces the ``(max_deg, D)`` ring slot to a mean row while the
+next node's rows are in flight — compute/DMA overlap on the op the
+hardware pipeline cannot block-schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from ..common import RowRing
+
+
+def _kernel(nbrs_ref, feats_ref, out_ref, ring, sems, *, max_deg: int,
+            lookahead: int):
+    g = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    def row_for(node, r):
+        nid = nbrs_ref[node * max_deg + r]
+        return jnp.maximum(nid, 0)          # clamp padding for a safe DMA
+
+    rr = RowRing(feats_ref, ring, sems, row_for=row_for,
+                 rows_per_block=max_deg, lookahead=lookahead)
+    rr.head_start(nb)
+    slot = rr.steady(g, nb)
+
+    ids = jnp.stack([nbrs_ref[g * max_deg + r] for r in range(max_deg)])
+    mask = (ids >= 0).astype(ring.dtype)                     # (M,)
+    rows = ring[slot] * mask[:, None]                        # (M, D)
+    deg = jnp.maximum(mask.sum(), 1).astype(ring.dtype)
+    out_ref[...] = (rows.sum(axis=0) / deg)[None, :]
+
+    rr.stay_ahead(g, slot, nb)
+
+
+def build(n_nodes: int, feats_shape: tuple, dtype, *, max_deg: int,
+          lookahead: int, interpret: bool):
+    D = feats_shape[1]
+    lookahead = max(1, min(lookahead, n_nodes))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_nodes,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((1, D), lambda g, nbrs_ref: (g, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((lookahead, max_deg, D), dtype),
+            pltpu.SemaphoreType.DMA((lookahead, max_deg)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, max_deg=max_deg, lookahead=lookahead),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_nodes, D), dtype),
+        interpret=interpret,
+    )

@@ -1,0 +1,27 @@
+"""Jitted wrapper for csr_gather_mean."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import common
+from . import kernel as _k
+from .ref import csr_gather_mean_ref
+
+
+@functools.partial(jax.jit, static_argnames=("lookahead", "interpret"))
+def csr_gather_mean(feats: jnp.ndarray, nbrs: jnp.ndarray, *,
+                    lookahead: int = 8,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Mean of neighbor rows: ``feats`` (R, D), ``nbrs`` (N, M) with -1 pad."""
+    if interpret is None:
+        interpret = common.on_cpu()
+    n, max_deg = nbrs.shape
+    fn = _k.build(n, feats.shape, feats.dtype, max_deg=max_deg,
+                  lookahead=lookahead, interpret=interpret)
+    return fn(nbrs.astype(jnp.int32).reshape(-1), feats)
+
+
+__all__ = ["csr_gather_mean", "csr_gather_mean_ref"]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the csr_gather kernel (PageRank / BFS analogue)."""
+import jax.numpy as jnp
+
+
+def csr_gather_mean_ref(feats: jnp.ndarray,
+                        nbrs: jnp.ndarray) -> jnp.ndarray:
+    """Mean of neighbor feature rows.
+
+    ``feats``: (R, D) node features.  ``nbrs``: (N, M) padded neighbor
+    ids, ``-1`` = padding.  Returns (N, D) — the PageRank inner loop
+    (sum of incoming ranks) with irregular neighbor-row gathers.
+    """
+    mask = (nbrs >= 0)
+    safe = jnp.where(mask, nbrs, 0)
+    rows = feats[safe]                             # (N, M, D)
+    rows = rows * mask[..., None].astype(feats.dtype)
+    deg = jnp.maximum(mask.sum(axis=1), 1).astype(feats.dtype)
+    return rows.sum(axis=1) / deg[:, None]

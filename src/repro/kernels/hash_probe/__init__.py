@@ -1,0 +1,2 @@
+from .ops import hash_probe, build_table, HASH_MULT  # noqa: F401
+from .ref import hash_probe_ref  # noqa: F401

@@ -1,0 +1,105 @@
+"""Inline-prefetch open-addressing hash probe.
+
+The paper's motivating example (Listing 1) is a hash-table lookup whose
+critical DIL is the bucket load: the address is a *hash* of a streamed
+key — irregular by construction, runnable because the key stream does
+not depend on the loaded buckets.
+
+Here the **carrot is the hash function itself**, duplicated into the
+kernel and evaluated on SMEM scalars ``lookahead`` blocks ahead of the
+compute; the DMA fetches the ``window``-slot probe line.  The horse then
+does the key-compare/select entirely in VMEM — by the time block ``g``
+is compared, its buckets arrived ``k`` steps ago.
+
+Table layout (S, L) int32: col 0 key, col 1 value, L padded to the lane
+width so one probe window is a well-formed (window, L) VMEM tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from .ref import HASH_MULT, _MISS
+
+
+def _bucket(key, n_slots: int, window: int):
+    h = key.astype(jnp.uint32) * jnp.uint32(HASH_MULT)
+    return (h % jnp.uint32(max(1, n_slots - window))).astype(jnp.int32)
+
+
+def _kernel(keys_ref, table_ref, out_ref, ring, sems, *, block: int,
+            window: int, lookahead: int, n_slots: int):
+    g = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    def copy(blk, slot, b):
+        # carrot: recompute the hash of key (blk*block + b) — duplicated
+        # backward slice, running ahead of the horse.
+        start = _bucket(keys_ref[blk * block + b], n_slots, window)
+        return pltpu.make_async_copy(
+            table_ref.at[pl.ds(start, window)],
+            ring.at[slot, b],
+            sems.at[slot, b],
+        )
+
+    def start_block(blk, slot):
+        for b in range(block):
+            copy(blk, slot, b).start()
+
+    def wait_block(blk, slot):
+        for b in range(block):
+            copy(blk, slot, b).wait()
+
+    @pl.when(g == 0)
+    def _():                                   # head start
+        for j in range(lookahead):
+            @pl.when(j < nb)
+            def _():
+                start_block(j, j)
+
+    slot = jax.lax.rem(g, jnp.int32(lookahead))
+    wait_block(g, slot)                        # stay ahead: value arrived k ago
+
+    keys_vec = jnp.stack(
+        [keys_ref[g * block + b] for b in range(block)])       # (B,)
+    win = ring[slot]                                           # (B, W, L)
+    wkeys, wvals = win[:, :, 0], win[:, :, 1]
+    hit = wkeys == keys_vec[:, None]
+    found = hit.any(axis=1)
+    vals = jnp.where(found,
+                     jnp.max(jnp.where(hit, wvals, jnp.int32(_MISS)), axis=1),
+                     jnp.int32(-1))
+    out_ref[...] = jnp.stack([vals, found.astype(jnp.int32)], axis=1)
+
+    @pl.when(g + lookahead < nb)
+    def _():                                   # join: no issue in last k
+        start_block(g + lookahead, slot)
+
+
+def build(n_keys: int, table_shape: tuple, *, block: int, window: int,
+          lookahead: int, interpret: bool):
+    assert n_keys % block == 0
+    nb = n_keys // block
+    lookahead = max(1, min(lookahead, nb))
+    S, L = table_shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((block, 2), lambda g, keys_ref: (g, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((lookahead, block, window, L), jnp.int32),
+            pltpu.SemaphoreType.DMA((lookahead, block)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block=block, window=window,
+                          lookahead=lookahead, n_slots=S),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_keys, 2), jnp.int32),
+        interpret=interpret,
+    )

@@ -1,0 +1,50 @@
+"""Jitted wrapper + host-side table builder for hash_probe."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import common
+from . import kernel as _k
+from .ref import HASH_MULT, bucket_of, hash_probe_ref
+
+
+def build_table(keys: np.ndarray, values: np.ndarray, n_slots: int,
+                window: int = 8, line_width: int = 8) -> np.ndarray:
+    """Host-side open-addressing insert with bounded linear probing.
+
+    Keys that cannot be placed within ``window`` slots of their bucket
+    are dropped (bounded-displacement tables guarantee lookups touch one
+    line).  Returns (n_slots, line_width) int32; col0 key, col1 value.
+    """
+    table = np.full((n_slots, line_width), -1, dtype=np.int32)
+    start = np.asarray(bucket_of(jnp.asarray(keys), n_slots, window))
+    for k, v, s in zip(keys.tolist(), values.tolist(), start.tolist()):
+        for off in range(window):
+            slot = s + off
+            if table[slot, 0] == -1 or table[slot, 0] == k:
+                table[slot, 0] = k
+                table[slot, 1] = v
+                break
+    return table
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block", "lookahead",
+                                             "interpret"))
+def hash_probe(table: jnp.ndarray, keys: jnp.ndarray, *, window: int = 8,
+               block: int = 8, lookahead: int = 8,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Probe (S, L) table for each key. Returns (N, 2): value, found."""
+    if interpret is None:
+        interpret = common.on_cpu()
+    keys = keys.astype(jnp.int32)
+    keys_p, n = common.pad_rows(keys, block)
+    fn = _k.build(keys_p.shape[0], table.shape, block=block, window=window,
+                  lookahead=lookahead, interpret=interpret)
+    return fn(keys_p, table)[:n]
+
+
+__all__ = ["hash_probe", "hash_probe_ref", "build_table", "HASH_MULT"]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the hash_probe kernel (open addressing, bounded
+linear probe window — the STLHistogram / HashJoin access pattern).
+
+Table layout: (S, L) int32, col 0 = key (-1 = empty slot), col 1 = value,
+cols 2..L-1 = payload padding to a TPU-friendly line width.  Keys in the
+table are unique (hash-table semantics), so "the matching slot's value"
+is well-defined via a max-reduction over the probe window.
+"""
+import jax.numpy as jnp
+
+HASH_MULT = 40503  # Knuth-style multiplicative hash constant (fits int32)
+_MISS = -(2**31) + 1  # python int: kernels must not capture jax constants
+
+
+def bucket_of(keys: jnp.ndarray, n_slots: int, window: int) -> jnp.ndarray:
+    h = (keys.astype(jnp.uint32) * jnp.uint32(HASH_MULT))
+    return (h % jnp.uint32(max(1, n_slots - window))).astype(jnp.int32)
+
+
+def hash_probe_ref(table: jnp.ndarray, keys: jnp.ndarray,
+                   window: int = 8) -> jnp.ndarray:
+    """Returns (N, 2) int32: col 0 = value (or -1), col 1 = found flag."""
+    S = table.shape[0]
+    start = bucket_of(keys, S, window)                      # (N,)
+    offs = jnp.arange(window, dtype=jnp.int32)              # (W,)
+    slots = start[:, None] + offs[None, :]                  # (N, W)
+    wkeys = table[slots, 0]                                 # (N, W)
+    wvals = table[slots, 1]
+    hit = wkeys == keys[:, None]
+    found = hit.any(axis=1)
+    vals = jnp.where(found,
+                     jnp.max(jnp.where(hit, wvals, jnp.int32(_MISS)), axis=1),
+                     jnp.int32(-1))
+    return jnp.stack([vals, found.astype(jnp.int32)], axis=1)

@@ -1,0 +1,2 @@
+from .ops import paged_attn_scores  # noqa: F401
+from .ref import paged_attn_scores_ref  # noqa: F401

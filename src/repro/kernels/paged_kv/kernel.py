@@ -1,0 +1,79 @@
+"""Inline-prefetch paged-KV attention scores (decode path).
+
+Serving with a paged KV cache turns every decode step into the paper's
+DIL pattern: the physical page address is ``pool[page_table[b, p]]`` — an
+indirection through a dynamically-grown table.  The page-id stream is
+*runnable* (it comes from the allocator, not from the KV data), so the
+carrot DMAs page ``g + k`` while the MXU computes q·K on page ``g``.
+
+Grid is the flattened (batch, logical-page) space; the query row for the
+current sequence arrives through the regular BlockSpec pipeline (it is a
+striding operand — left to the "hardware" pipeline, exactly like the
+paper leaves striding loads to the CPU's prefetchers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(ptab_ref, pool_ref, q_ref, out_ref, ring, sems, *,
+            lookahead: int):
+    g = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    def copy(step, slot):
+        page = ptab_ref[step]
+        return pltpu.make_async_copy(
+            pool_ref.at[pl.ds(page, 1)],       # (1, page_size, D)
+            ring.at[pl.ds(slot, 1)],
+            sems.at[slot],
+        )
+
+    @pl.when(g == 0)
+    def _():                                    # head start
+        for j in range(lookahead):
+            @pl.when(j < nb)
+            def _():
+                copy(j, j).start()
+
+    slot = jax.lax.rem(g, jnp.int32(lookahead))
+    copy(g, slot).wait()
+
+    keys = ring[slot]                           # (page_size, D)
+    q = q_ref[0]                                # (D,)
+    out_ref[...] = (keys @ q)[None, :]          # (1, page_size)
+
+    @pl.when(g + lookahead < nb)
+    def _():                                    # stay ahead / join
+        copy(g + lookahead, slot).start()
+
+
+def build(batch: int, n_pages: int, pool_shape: tuple, dtype, *,
+          lookahead: int, interpret: bool):
+    P, page_size, D = pool_shape
+    nb = batch * n_pages
+    lookahead = max(1, min(lookahead, nb))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),              # pool in HBM
+            pl.BlockSpec((1, D), lambda g, ptab: (g // n_pages, 0)),  # q row
+        ],
+        out_specs=pl.BlockSpec((1, page_size), lambda g, ptab: (g, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((lookahead, page_size, D), dtype),
+            pltpu.SemaphoreType.DMA((lookahead,)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, lookahead=lookahead),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((nb, page_size), dtype),
+        interpret=interpret,
+    )

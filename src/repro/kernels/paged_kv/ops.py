@@ -1,0 +1,28 @@
+"""Jitted wrapper for paged_attn_scores."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import common
+from . import kernel as _k
+from .ref import paged_attn_scores_ref
+
+
+@functools.partial(jax.jit, static_argnames=("lookahead", "interpret"))
+def paged_attn_scores(pool: jnp.ndarray, page_table: jnp.ndarray,
+                      q: jnp.ndarray, *, lookahead: int = 4,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """q·K over a paged KV cache; see ref.py for shapes."""
+    if interpret is None:
+        interpret = common.on_cpu()
+    B, NP = page_table.shape
+    fn = _k.build(B, NP, pool.shape, pool.dtype, lookahead=lookahead,
+                  interpret=interpret)
+    out = fn(page_table.astype(jnp.int32).reshape(-1), pool, q)
+    return out.reshape(B, NP, pool.shape[1])
+
+
+__all__ = ["paged_attn_scores", "paged_attn_scores_ref"]

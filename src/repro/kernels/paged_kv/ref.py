@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the paged_kv kernel (decode-path DIL)."""
+import jax.numpy as jnp
+
+
+def paged_attn_scores_ref(pool: jnp.ndarray, page_table: jnp.ndarray,
+                          q: jnp.ndarray) -> jnp.ndarray:
+    """Attention logits of one query against a paged KV cache.
+
+    ``pool``: (P, page_size, D) physical key pages in HBM.
+    ``page_table``: (B, NP) int32 logical->physical page ids.
+    ``q``: (B, D) one query vector per sequence (decode step).
+    Returns (B, NP, page_size) = q · k over every paged key — the
+    serving-side delinquent irregular load (page indirection).
+    """
+    pages = pool[page_table]                    # (B, NP, page, D)
+    return jnp.einsum("bnpd,bd->bnp", pages, q)

@@ -1,0 +1,2 @@
+from .ops import prefetch_gather  # noqa: F401
+from .ref import prefetch_gather_ref  # noqa: F401

@@ -1,0 +1,71 @@
+"""Inline-prefetch irregular row gather — the flagship kernel.
+
+``out[i] = table[idx[i]]`` with ``table`` resident in HBM (memory space
+ANY, *not* block-pipelined by Pallas) and ``idx`` a scalar-prefetch
+operand in SMEM.  The index stream is the paper's *runnable backward
+slice*: it is available ahead of time precisely because the DIL screen
+proved it independent of the gathered data.
+
+Schedule (paper Fig. 6):
+
+* grid step ``g`` owns a block of ``block_rows`` output rows;
+* at ``g == 0`` the kernel issues DMAs for blocks ``0 .. k-1``
+  (**head start**);
+* every step waits for block ``g``'s rows in ring slot ``g % k``,
+  copies them to the output block (**horse**), then issues block
+  ``g + k``'s DMAs into the now-free slot (**stay ahead**, carrot);
+* the last ``k`` blocks issue nothing (**join**).
+
+VMEM footprint: ``k * block_rows * row_bytes`` ring + one output block —
+chosen by :func:`repro.core.planner.plan_prefetch_distance`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from ..common import RowRing
+
+
+def _kernel(idx_ref, table_ref, out_ref, ring, sems, *, block_rows: int,
+            lookahead: int):
+    g = pl.program_id(0)
+    nb = pl.num_programs(0)
+    rr = RowRing(table_ref, ring, sems,
+                 row_for=lambda blk, r: idx_ref[blk * block_rows + r],
+                 rows_per_block=block_rows, lookahead=lookahead)
+    rr.head_start(nb)
+    slot = rr.steady(g, nb)
+    out_ref[...] = ring[slot]
+    rr.stay_ahead(g, slot, nb)
+
+
+def build(n_rows: int, table_shape: tuple, dtype, *, block_rows: int,
+          lookahead: int, interpret: bool):
+    """Construct the pallas_call for a padded problem size."""
+    assert n_rows % block_rows == 0
+    nb = n_rows // block_rows
+    lookahead = max(1, min(lookahead, nb))
+    feat = table_shape[1:]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],   # table stays in HBM
+        out_specs=pl.BlockSpec((block_rows,) + feat,
+                               lambda g, idx_ref: (g,) + (0,) * len(feat)),
+        scratch_shapes=[
+            pltpu.VMEM((lookahead, block_rows) + feat, dtype),
+            pltpu.SemaphoreType.DMA((lookahead, block_rows)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block_rows=block_rows,
+                          lookahead=lookahead),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_rows,) + feat, dtype),
+        interpret=interpret,
+    )

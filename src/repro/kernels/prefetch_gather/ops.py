@@ -1,0 +1,39 @@
+"""Jitted public wrapper for the prefetch_gather kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .. import common
+from . import kernel as _k
+from .ref import prefetch_gather_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "lookahead",
+                                             "interpret"))
+def prefetch_gather(table: jnp.ndarray, idx: jnp.ndarray, *,
+                    block_rows: int = 8, lookahead: int = 8,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """``table[idx]`` with a k-deep inline-prefetch pipeline.
+
+    ``table``: (R, ...) source in HBM.  ``idx``: (N,) int32 row ids.
+    ``lookahead`` is the paper's prefetch distance k (in blocks).
+    Falls back to interpret mode automatically off-TPU.
+    """
+    if interpret is None:
+        interpret = common.on_cpu()
+    if idx.dtype != jnp.int32:
+        idx = idx.astype(jnp.int32)
+    # clamp (paper: join-phase overrun safety; also matches ref mode="clip")
+    idx = jnp.clip(idx, 0, table.shape[0] - 1)
+    idx_p, n = common.pad_rows(idx, block_rows)
+    fn = _k.build(idx_p.shape[0], table.shape, table.dtype,
+                  block_rows=block_rows, lookahead=lookahead,
+                  interpret=interpret)
+    out = fn(idx_p, table)
+    return out[:n]
+
+
+__all__ = ["prefetch_gather", "prefetch_gather_ref"]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the prefetch_gather kernel."""
+import jax.numpy as jnp
+
+
+def prefetch_gather_ref(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """``out[i] = table[idx[i]]`` — XLA dynamic gather, no software pipeline.
+
+    This is both the correctness oracle and the *baseline* the paper
+    compares against (the unmodified binary).
+    """
+    return jnp.take(table, idx, axis=0, mode="clip")

@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init).  This module is the only place that forces
+512 host-platform devices — smoke tests and benches see the real host.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k --mesh single --out results/dryrun
+Outputs a JSON record per cell: memory analysis, cost analysis,
+per-collective byte counts (parsed from the optimized HLO), and timing.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from ..configs import SHAPES, cell_supported, get_arch
+from .mesh import make_production_mesh
+from .specs import input_specs
+
+# dtype byte widths for HLO operand parsing
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([0-9,]*)\]")
+
+
+def _op_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-operand bytes of every collective op in the HLO."""
+    out: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "name = TYPE[dims] collective-kind(...)"
+        m = re.match(r"[%\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        kind = m.group(2)
+        for c in _COLLECTIVES:
+            if kind == c or kind.startswith(c + "-"):
+                out[c] += _op_bytes(m.group(1))
+                out["count"] += 1
+                break
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opts: frozenset = frozenset()) -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single",
+           "opts": sorted(opts)}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        step_fn, args, in_ps, out_ps, donate = input_specs(
+            arch, shape_name, mesh, opts=opts)
+        from ..parallel import activation_sharding
+        in_sh = _to_shardings(in_ps, mesh)
+        out_sh = _to_shardings(out_ps, mesh)
+        with mesh, activation_sharding(mesh):
+            jitted = jax.jit(step_fn, in_shardings=in_sh,
+                             out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t1
+            # collectives live in the *partitioned* HLO (SPMD runs at
+            # compile time), so parse compiled.as_text()
+            coll = collective_bytes(compiled.as_text())
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+        rec.update(
+            status="ok",
+            n_devices=mesh.devices.size,
+            flops=float(cost.get("flops", -1.0)),
+            bytes_accessed=float(cost.get("bytes accessed", -1.0)),
+            collectives=coll,
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            memory=_mem_dict(mem),
+            model_params=cfg.param_count(),
+            model_params_active=cfg.param_count(active_only=True),
+        )
+        print(f"[dryrun] {arch} {shape_name} "
+              f"{'multi' if multi_pod else 'single'}: OK "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+        print("  memory_analysis:", rec["memory"])
+        print("  cost_analysis: flops=%.3e bytes=%.3e" %
+              (rec["flops"], rec["bytes_accessed"]))
+        print("  collective bytes:", coll["total"])
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        print(f"[dryrun] {arch} {shape_name} FAILED: {e}")
+    return rec
+
+
+def _to_shardings(tree, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--opts", default="",
+                    help="comma list: triangle,dots_remat,grad_compress,"
+                         "tp_serve (perf-iteration variants)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    opts = frozenset(o for o in args.opts.split(",") if o)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for multi in meshes:
+        rec = run_cell(args.arch, args.shape, multi, opts)
+        tag = "multi" if multi else "single"
+        if opts:
+            tag += "__" + "-".join(sorted(opts))
+        path = os.path.join(args.out,
+                            f"{args.arch}__{args.shape}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

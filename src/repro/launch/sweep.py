@@ -1,0 +1,62 @@
+"""Run the dry-run over many (arch × shape × mesh) cells, resumably.
+
+Each cell runs in a subprocess (jax device-count isolation) and is
+skipped if its JSON already records status ok/skipped.  Partitioning via
+--part i/n lets several sweep processes run concurrently.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+from ..configs import ARCHS, SHAPES
+
+
+def done(path: str) -> bool:
+    if not os.path.exists(path):
+        return False
+    try:
+        with open(path) as f:
+            return json.load(f).get("status") in ("ok", "skipped")
+    except Exception:
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--part", default="0/1")    # i/n round-robin split
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--timeout", type=int, default=2400)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    i, n = map(int, args.part.split("/"))
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    cells = [(a, s, m) for a in ARCHS for s in SHAPES for m in meshes]
+    cells = [c for j, c in enumerate(cells) if j % n == i]
+    os.makedirs(args.out, exist_ok=True)
+
+    for arch, shape, mesh in cells:
+        path = os.path.join(args.out, f"{arch}__{shape}__{mesh}.json")
+        if not args.force and done(path):
+            print(f"[sweep] skip {arch} {shape} {mesh} (done)")
+            continue
+        print(f"[sweep] run  {arch} {shape} {mesh}", flush=True)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh, "--out", args.out]
+        try:
+            subprocess.run(cmd, timeout=args.timeout, check=False)
+        except subprocess.TimeoutExpired:
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "mesh": mesh,
+                           "status": "error",
+                           "error": f"compile timeout {args.timeout}s"}, f)
+            print(f"[sweep] TIMEOUT {arch} {shape} {mesh}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-8b \
+        --steps 100 --batch 8 --seq 256 [--model-axis 1] [--reduced]
+
+On this CPU container ``--reduced`` (default) trains the smoke-scale
+variant; on a real TPU slice the same entry point builds the full config
+and the (data, model) mesh from the actual device fleet.
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..configs import get_arch, reduced
+from ..optim import AdamWConfig
+from ..runtime import TrainConfig, Trainer
+from .mesh import make_local_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full published config (TPU-scale)")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    mesh = make_local_mesh(model=args.model_axis)
+    tr = Trainer(cfg, TrainConfig(microbatches=args.microbatches,
+                                  peak_lr=args.lr,
+                                  adamw=AdamWConfig(lr=args.lr)),
+                 mesh, seq_len=args.seq, global_batch=args.batch,
+                 ckpt_dir=args.ckpt)
+    hist = tr.run(args.steps, log_every=5)
+    for step, loss, dt in hist:
+        print(f"step {step:>5}  loss {loss:.4f}  {dt * 1e3:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Model zoo: a unified decoder-only transformer (dense/MoE/SSM/hybrid/
+VLM) plus an encoder-decoder variant (Whisper).  Dispatch on cfg.family.
+"""
+from __future__ import annotations
+
+from . import encdec, transformer
+from .config import ModelConfig, MoEConfig, reduced  # noqa: F401
+
+
+def _mod(cfg: ModelConfig):
+    return encdec if cfg.family == "encdec" else transformer
+
+
+def init_params(cfg: ModelConfig, key):
+    return _mod(cfg).init_params(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig):
+    return _mod(cfg).abstract_params(cfg)
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    return _mod(cfg).train_loss(params, batch, cfg)
+
+
+def prefill(params, batch, cfg: ModelConfig, capacity=None):
+    if cfg.family == "encdec":
+        logits = encdec.forward(params, batch, cfg)
+        return logits[:, -1], None
+    return transformer.prefill(params, batch, cfg, capacity)
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int):
+    return _mod(cfg).init_cache(cfg, batch, capacity)
+
+
+def decode_step(params, cache, token, cfg: ModelConfig, pos=None):
+    return _mod(cfg).decode_step(params, cache, token, cfg, pos)

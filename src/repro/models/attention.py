@@ -1,0 +1,274 @@
+"""GQA attention with RoPE, qk-norm, sliding windows, and a KV cache.
+
+Prefill/train attention is a blocked online-softmax scan over KV blocks
+(flash-attention schedule in pure JAX): the (Sq, Skv) logit matrix is
+never materialised, which is what lets the 32k prefill shapes compile
+within per-device HBM on the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import dtype_of, init_linear, linear, rms_norm
+
+NEG_INF = -1e30
+
+
+def rope(x, positions, theta):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.arange(half, dtype=jnp.float32) / half
+    inv = theta ** -freqs                                 # (half,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :].astype(x.dtype)               # (..., S, 1, half)
+    sin = sin[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+def init_attn(key, cfg: ModelConfig, cross: bool = False):
+    d, dh = cfg.d_model, cfg.head_dim
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    dtype = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    p = {"wq": init_linear(ks[0], d, Hq * dh, dtype, bias=cfg.attn_bias),
+         "wk": init_linear(ks[1], d, Hkv * dh, dtype, bias=cfg.attn_bias),
+         "wv": init_linear(ks[2], d, Hkv * dh, dtype, bias=cfg.attn_bias),
+         "wo": init_linear(ks[3], Hq * dh, d, dtype, bias=cfg.attn_bias)}
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((dh,), dtype=dtype)}
+        p["k_norm"] = {"scale": jnp.ones((dh,), dtype=dtype)}
+    return p
+
+
+def _project_qkv(p, x_q, x_kv, cfg: ModelConfig, q_pos, kv_pos):
+    B, Sq, _ = x_q.shape
+    Skv = x_kv.shape[1]
+    dh, Hq, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = linear(p["wq"], x_q).reshape(B, Sq, Hq, dh)
+    k = linear(p["wk"], x_kv).reshape(B, Skv, Hkv, dh)
+    v = linear(p["wv"], x_kv).reshape(B, Skv, Hkv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"]["scale"], cfg.norm_eps)
+    if q_pos is not None:
+        q = rope(q, q_pos, cfg.rope_theta)
+    if kv_pos is not None:
+        k = rope(k, kv_pos, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask_block(q_idx, k_idx, causal, window):
+    """(Sq, Bk) additive mask block."""
+    m = jnp.zeros((q_idx.shape[0], k_idx.shape[0]), dtype=jnp.float32)
+    if causal:
+        m = jnp.where(q_idx[:, None] >= k_idx[None, :], m, NEG_INF)
+    if window is not None:
+        m = jnp.where(q_idx[:, None] - k_idx[None, :] < window, m, NEG_INF)
+    return m
+
+
+def blocked_attention(q, k, v, *, causal: bool, window: int | None,
+                      softcap: float | None = None,
+                      q_offset=0, block: int = 512,
+                      q_block: int = 512):
+    """Online-softmax attention, tiled over BOTH q and kv blocks.
+
+    q: (B, Sq, Hq, dh); k, v: (B, Skv, Hkv, dh).  GQA via head groups —
+    no materialised KV repeat.  Returns (B, Sq, Hq, dh).
+
+    The q tiling bounds the f32 logit tile to (B, H, q_block, block);
+    without it a 32k prefill materialises multi-GB score tiles per KV
+    step.
+    """
+    B, Sq, Hq, dh = q.shape
+    if Sq > q_block:
+        nqb = (Sq + q_block - 1) // q_block
+        pad = nqb * q_block - Sq
+        qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+        qb = qp.reshape(B, nqb, q_block, Hq, dh).swapaxes(0, 1)
+        offs = q_offset + q_block * jnp.arange(nqb, dtype=jnp.int32)
+
+        def one(args):
+            qi, off = args
+            return _blocked_attention_flat(
+                qi, k, v, causal=causal, window=window, softcap=softcap,
+                q_offset=off, block=block)
+
+        out = lax.map(one, (qb, offs))                  # (nqb, B, qb, H, dh)
+        out = out.swapaxes(0, 1).reshape(B, nqb * q_block, Hq, dh)
+        return out[:, :Sq]
+    return _blocked_attention_flat(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, q_offset=q_offset,
+                                   block=block)
+
+
+def _blocked_attention_flat(q, k, v, *, causal, window, softcap,
+                            q_offset, block):
+    B, Sq, Hq, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = (q * scale).reshape(B, Sq, Hkv, G, dh).astype(jnp.float32)
+    block = min(block, Skv)
+    nb = (Skv + block - 1) // block
+    pad = nb * block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nb, block, Hkv, dh)
+    vb = v.reshape(B, nb, block, Hkv, dh)
+    q_idx = q_offset + jnp.arange(Sq, dtype=jnp.int32)
+
+    def step(carry, inp):
+        m_run, l_run, acc = carry
+        kblk, vblk, bi = inp
+        k_idx = bi * block + jnp.arange(block, dtype=jnp.int32)
+        logits = jnp.einsum("bshgd,bthd->bhgst", qg,
+                            kblk.astype(jnp.float32))
+        if softcap is not None:
+            logits = softcap * jnp.tanh(logits / softcap)
+        mask = _mask_block(q_idx, k_idx, causal, window)
+        mask = jnp.where(k_idx[None, :] < Skv, mask, NEG_INF)   # kv padding
+        logits = logits + mask[None, None, None]
+        m_new = jnp.maximum(m_run, logits.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        pexp = jnp.exp(logits - m_new[..., None])
+        l_new = l_run * alpha + pexp.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgst,bthd->bhgsd", pexp, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), dtype=jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, dh), dtype=jnp.float32)
+    (m_f, l_f, acc), _ = lax.scan(
+        step, (m0, l0, a0),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1),
+         jnp.arange(nb, dtype=jnp.int32)))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, dh)
+    return out.astype(q.dtype)
+
+
+def attn_block(p, x, cfg: ModelConfig, *, causal=True, positions=None,
+               x_kv=None, kv_positions=None, use_rope=True):
+    """Full-sequence (train / prefill / encoder / cross) attention."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x_kv = x if x_kv is None else x_kv
+    if kv_positions is None:
+        kv_positions = (positions if x_kv.shape[1] == S else
+                        jnp.arange(x_kv.shape[1], dtype=jnp.int32)[None, :])
+    q_pos = positions if use_rope else None
+    kv_pos = kv_positions if use_rope else None
+    q, k, v = _project_qkv(p, x, x_kv, cfg, q_pos, kv_pos)
+    from .flash import flash_attention
+    out = flash_attention(q, k, v, causal, cfg.sliding_window,
+                          cfg.attn_logit_softcap,
+                          triangle=cfg.flash_triangle)
+    return linear(p["wo"], out.reshape(B, S, -1)), (k, v)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, capacity: int, dtype):
+    dh, Hkv = cfg.head_dim, cfg.n_kv_heads
+    if cfg.kv_quant:
+        # int8 cache + per-(position, head) f32 scales: 0.53× the bf16
+        # bytes — decode is cache-bandwidth-bound, so this moves the
+        # memory roofline term directly (§Perf, lossy variant)
+        return {"k": jnp.zeros((batch, capacity, Hkv, dh), jnp.int8),
+                "v": jnp.zeros((batch, capacity, Hkv, dh), jnp.int8),
+                "k_scale": jnp.zeros((batch, capacity, Hkv, 1),
+                                     jnp.float32),
+                "v_scale": jnp.zeros((batch, capacity, Hkv, 1),
+                                     jnp.float32)}
+    return {"k": jnp.zeros((batch, capacity, Hkv, dh), dtype=dtype),
+            "v": jnp.zeros((batch, capacity, Hkv, dh), dtype=dtype)}
+
+
+def _quant_i8(x):
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def decode_attn(p, x, cache, pos, cfg: ModelConfig, *, use_rope=True):
+    """One-token decode.  x: (B, 1, d); pos: () int32 — the index of the
+    new token (the cache holds the KV of positions < pos).
+
+    Two cache layouts, chosen by capacity:
+
+    * **linear** (capacity > window, or no window): write at slot ``pos``,
+      score every slot with ``k_idx <= pos`` (+ window mask if SWA);
+    * **ring** (SWA and capacity == window): write at ``pos % W``; slot
+      ``j`` then holds absolute position ``pos - ((pos - j) mod W)``,
+      which is always inside the window, so only ``p_j >= 0`` needs
+      masking.  This keeps long-context decode (long_500k) at O(W)
+      memory — the TPU-side reason SWA archs are long-context-eligible.
+
+    RoPE is applied at insert time, so ring rotation never re-rotates.
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, x, cfg,
+                                   positions if use_rope else None,
+                                   positions if use_rope else None)
+    capacity = cache["k"].shape[1]
+    W = cfg.sliding_window
+    ring = W is not None and capacity == W
+    slot = lax.rem(pos, capacity) if ring else pos
+    quant = "k_scale" in cache
+    if quant:
+        kq, ks = _quant_i8(k_new)
+        vq, vs = _quant_i8(v_new)
+        new_cache_kv = {
+            "k": lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0)),
+            "v": lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0)),
+            "k_scale": lax.dynamic_update_slice(cache["k_scale"], ks,
+                                                (0, slot, 0, 0)),
+            "v_scale": lax.dynamic_update_slice(cache["v_scale"], vs,
+                                                (0, slot, 0, 0)),
+        }
+        k = (new_cache_kv["k"].astype(jnp.float32)
+             * new_cache_kv["k_scale"])
+        v = (new_cache_kv["v"].astype(jnp.float32)
+             * new_cache_kv["v_scale"])
+    else:
+        k = lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v = lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache_kv = {"k": k, "v": v}
+    j = jnp.arange(capacity, dtype=jnp.int32)
+    if ring:
+        abs_pos = pos - lax.rem(pos - j + capacity * 2, capacity)
+        valid = abs_pos >= 0
+    else:
+        valid = j <= pos
+        if W is not None:
+            valid = valid & (pos - j < W)
+    dh = cfg.head_dim
+    Hkv = cfg.n_kv_heads
+    G = cfg.n_heads // Hkv
+    qg = (q * (1.0 / math.sqrt(dh))).reshape(B, 1, Hkv, G, dh)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    if cfg.attn_logit_softcap is not None:
+        logits = cfg.attn_logit_softcap * jnp.tanh(
+            logits / cfg.attn_logit_softcap)
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", w, v.astype(jnp.float32))
+    out = out.reshape(B, 1, -1).astype(x.dtype)
+    return linear(p["wo"], out), new_cache_kv

@@ -1,0 +1,167 @@
+"""Unified model configuration covering all ten assigned architectures.
+
+One flat frozen dataclass; family-specific fields are optional.  The
+per-layer mixer is selected from ``mixer_pattern`` cycled over layers
+(e.g. RecurrentGemma's 1:2 local-attn : RG-LRU ratio is
+``("rglru", "rglru", "attn")``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_expert: int | None = None      # per-expert FFN width (fine-grained MoE)
+    capacity_factor: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int | None = None
+
+    # attention
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    sliding_window: int | None = None          # SWA window (None = full)
+    attn_bias: bool = False
+    attn_logit_softcap: float | None = None
+    mixer_pattern: tuple = ("attn",)           # cycled over layers
+
+    # families
+    moe: MoEConfig | None = None
+    rwkv_head_dim: int = 64                    # rwkv6 head size
+    rglru_conv_width: int = 4
+    rglru_d_rnn: int | None = None             # lru width (default d_model)
+
+    # encoder-decoder (whisper): encoder layers share d_model
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500                    # precomputed frame count (stub)
+
+    # vlm (llava): stub patch embeddings prepended to the token stream
+    n_patches: int = 0
+
+    # misc
+    act: Literal["swiglu", "gelu"] = "swiglu"
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    remat: bool = True                         # per-block activation ckpt
+    # §Perf levers (beyond-paper; defaults = paper-faithful baseline)
+    flash_triangle: bool = False               # skip masked causal tiles
+    remat_policy: str = "full"                 # "full" | "dots"
+    kv_quant: bool = False                     # int8 KV cache (decode)
+    # paper feature: route embedding/MoE gathers through the inline
+    # prefetcher kernels where a single-core Pallas path is usable.
+    use_pallas_prefetch: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else (
+            self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to 256 (Megatron-style) so the logits/vocab
+        dim shards on a 16/32-way model axis (whisper's 51866 would
+        otherwise replicate a 13 GB/device logits tensor).  Padding
+        columns are masked to -inf in ``unembed``; labels never hit them.
+        """
+        return -(-self.vocab_size // 256) * 256
+
+    def mixer_of(self, layer: int) -> str:
+        return self.mixer_pattern[layer % len(self.mixer_pattern)]
+
+    @property
+    def attn_free(self) -> bool:
+        return all(m != "attn" for m in self.mixer_pattern)
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for long_500k: attention-free, hybrid-local or SWA."""
+        return self.attn_free or self.sliding_window is not None
+
+    # ---- parameter counting (for 6·N·D roofline bookkeeping) -------------
+    def param_count(self, active_only: bool = False) -> int:
+        d, ff, V = self.d_model, self.d_ff, self.vocab_size
+        dh, Hq, Hkv = self.head_dim, self.n_heads, self.n_kv_heads
+        n = 0
+        embed = V * d
+        n += embed if self.tie_embeddings else 2 * embed
+        for layer in range(self.n_layers):
+            mixer = self.mixer_of(layer)
+            if mixer == "attn":
+                n += d * Hq * dh + 2 * d * Hkv * dh + Hq * dh * d
+                if self.qk_norm:
+                    n += 2 * dh
+            elif mixer == "rwkv6":
+                n += 4 * d * d + d * d          # r,k,v,g,out
+                n += 2 * 32 * d                 # ddlerp/decay loras (approx)
+            elif mixer == "rglru":
+                dr = self.rglru_d_rnn or d
+                n += 2 * d * dr + dr * d        # in/gate/out projections
+                n += self.rglru_conv_width * dr + 2 * dr
+            if self.moe is not None:
+                de = self.moe.d_expert or ff
+                routed = self.moe.n_experts * 3 * d * de
+                shared = self.moe.n_shared * 3 * d * de
+                router = d * self.moe.n_experts
+                if active_only:
+                    routed = self.moe.top_k * 3 * d * de
+                n += routed + shared + router
+            else:
+                mult = 3 if self.act == "swiglu" else 2
+                n += mult * d * ff
+            n += 2 * d                          # norms
+        n += d
+        if self.n_encoder_layers:
+            per = d * Hq * dh + 2 * d * Hkv * dh + Hq * dh * d + 3 * d * ff + 2 * d
+            n += self.n_encoder_layers * per
+            # decoder cross-attention
+            n += self.n_layers * (d * Hq * dh + 2 * d * Hkv * dh + Hq * dh * d + d)
+        return int(n)
+
+
+def reduced(cfg: ModelConfig, *, n_layers: int = 2, d_model: int = 64,
+            n_heads: int = 4, n_kv_heads: int | None = None,
+            d_ff: int = 128, vocab: int = 512) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    kv = n_kv_heads if n_kv_heads is not None else max(1, min(
+        cfg.n_kv_heads, n_heads))
+    kw = dict(
+        n_layers=n_layers, d_model=d_model, n_heads=n_heads,
+        n_kv_heads=kv, d_ff=d_ff, vocab_size=vocab, d_head=None,
+        remat=False,
+    )
+    if cfg.moe is not None:
+        # capacity_factor 4.0: no token drops at smoke scale, so
+        # prefill-vs-decode equivalence is exact (capacity dropping is
+        # batch-context-dependent by design; full configs keep cf=1.0)
+        kw["moe"] = MoEConfig(n_experts=min(8, cfg.moe.n_experts),
+                              top_k=min(2, cfg.moe.top_k),
+                              n_shared=min(1, cfg.moe.n_shared),
+                              d_expert=32 if cfg.moe.d_expert else None,
+                              capacity_factor=4.0)
+    if cfg.sliding_window is not None:
+        kw["sliding_window"] = 16
+    if cfg.n_encoder_layers:
+        kw["n_encoder_layers"] = 2
+        kw["encoder_seq"] = 8
+    if cfg.n_patches:
+        kw["n_patches"] = 4
+    if cfg.rglru_d_rnn:
+        kw["rglru_d_rnn"] = d_model
+    return dataclasses.replace(cfg, **kw)

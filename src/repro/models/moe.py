@@ -1,0 +1,170 @@
+"""Fine-grained Mixture-of-Experts with sort-based dispatch.
+
+Dispatch is the MoE-side DIL (paper §1.1: ``a[b[i]]`` where ``b`` is the
+router output): tokens are gathered into per-expert buffers through an
+irregular index stream that is *runnable* — the routing decision depends
+only on the router logits, not on the gathered expert weights — so the
+token gather/scatter is exactly the access pattern the inline prefetcher
+targets (see kernels/prefetch_gather; the distributed path below uses
+XLA gather/scatter so it shards over the "model"/expert axis).
+
+Capacity-bounded: ``C = ceil(T * top_k / E * capacity_factor)``; overflow
+tokens are dropped from the routed path (standard practice), shared
+experts always run densely (DeepSeek-MoE's 2 shared experts).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dtype_of, init_linear, linear
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    d, dtype = cfg.d_model, dtype_of(cfg)
+    de = m.d_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+
+    def bank(k, n):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "w_gate": (jax.random.normal(k1, (n, d, de), jnp.float32)
+                       * scale).astype(dtype),
+            "w_up": (jax.random.normal(k2, (n, d, de), jnp.float32)
+                     * scale).astype(dtype),
+            "w_down": (jax.random.normal(k3, (n, de, d), jnp.float32)
+                       * (1.0 / math.sqrt(de))).astype(dtype),
+        }
+
+    p = {"router": init_linear(ks[0], d, m.n_experts, dtype),
+         "experts": bank(ks[1], m.n_experts)}
+    if m.n_shared:
+        p["shared"] = bank(ks[2], m.n_shared)
+    return p
+
+
+_FFN_CHUNK = 2048
+
+
+def _expert_ffn(bank, x):
+    """x: (E, C, d) -> (E, C, d) SwiGLU via per-expert weights.
+
+    Chunked over the capacity dim: the (E, C, d_ff) hidden transient at
+    dbrx scale (16 × 8192 × 10752 bf16 ≈ 5.6 GB/device, ×3 live copies)
+    is what blew the 32k-prefill cell past HBM; chunks bound it to
+    C=2048 slices.
+    """
+    E, C, d = x.shape
+    if C <= _FFN_CHUNK or C % _FFN_CHUNK != 0:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, bank["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", x, bank["w_up"])
+        return jnp.einsum("ecf,efd->ecd", h, bank["w_down"])
+    nc = C // _FFN_CHUNK
+    xc = x.reshape(E, nc, _FFN_CHUNK, d).transpose(1, 0, 2, 3)
+
+    def one(xi):
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xi, bank["w_gate"]))
+        h = h * jnp.einsum("ecd,edf->ecf", xi, bank["w_up"])
+        return jnp.einsum("ecf,efd->ecd", h, bank["w_down"])
+
+    out = jax.lax.map(one, xc)                       # (nc, E, chunk, d)
+    return out.transpose(1, 0, 2, 3).reshape(E, C, d)
+
+
+def moe_block(p, x, cfg: ModelConfig):
+    """Grouped dispatch: routing/sort/scatter run independently per batch
+    row (``jax.vmap`` over B).  The group axis shards over "data", the
+    expert axis over "model" (EP) — without grouping, the global argsort
+    and (T·K, d) gather materialise unsharded multi-GB dispatch tensors
+    under SPMD (observed 53 GB/device on the 32k-prefill dry-run cell).
+    Capacity is group-local: C = ceil(S·K/E · cf).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.n_experts, m.top_k
+    # Big dispatches run sequentially over groups (lax.map) with the
+    # sequence split into <=8k-token chunks: vmap materialises every
+    # group's (S·K, d) gather/scatter tensors at once (27+ GB/device on
+    # the dbrx 32k-prefill cell); map keeps one chunk live.
+    seq_chunk = S
+    dispatch_bytes = B * S * K * d * 2
+    if dispatch_bytes > 1 << 30 and S % 8192 == 0 and S > 8192:
+        seq_chunk = 8192
+    C = max(1, int(math.ceil(seq_chunk * K / E * m.capacity_factor)))
+
+    def one_chunk(xf):                                        # (Sc, d)
+        S = xf.shape[0]
+        logits = linear(p["router"], xf).astype(jnp.float32)  # (S, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_w, sel = jax.lax.top_k(probs, K)                 # (S, K)
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+        # ---- sort-based dispatch (the irregular gather/scatter) ---------
+        e_flat = sel.reshape(-1)                              # (S*K,)
+        t_flat = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)
+        w_flat = gate_w.reshape(-1)
+        order = jnp.argsort(e_flat)                           # stable
+        e_s, t_s, w_s = e_flat[order], t_flat[order], w_flat[order]
+        seg_sizes = jax.ops.segment_sum(jnp.ones_like(e_s), e_s,
+                                        num_segments=E)
+        seg_start = jnp.concatenate(
+            [jnp.zeros((1,), seg_sizes.dtype), jnp.cumsum(seg_sizes)[:-1]])
+        pos = (jnp.arange(S * K, dtype=jnp.int32)
+               - seg_start[e_s].astype(jnp.int32))
+        keep = pos < C
+        pos_c = jnp.minimum(pos, C - 1)
+
+        # gather tokens -> expert buffers (DIL #1).  Unclamped ``pos`` +
+        # mode="drop": overflow tokens fall out of the scatter instead of
+        # clobbering slot C-1.  The single-core serving path routes the
+        # gather through the inline-prefetch Pallas kernel (the router
+        # output is a runnable index stream — the paper's a[b[i]]); the
+        # distributed path keeps the XLA gather (SPMD-shardable).
+        if cfg.use_pallas_prefetch:
+            from ..kernels import prefetch_gather
+            rows = prefetch_gather(xf, t_s)
+        else:
+            rows = xf[t_s]
+        buf = jnp.zeros((E, C, d), dtype=xf.dtype).at[e_s, pos].set(
+            rows, mode="drop")
+
+        out_buf = _expert_ffn(p["experts"], buf)              # (E, C, d)
+
+        # combine (DIL #2: scatter-add back to token order)
+        back = out_buf[e_s, pos_c] * (w_s * keep).astype(xf.dtype)[:, None]
+        out = jnp.zeros((S, d), dtype=xf.dtype).at[t_s].add(
+            back, mode="drop")
+        return out, _load_balance_loss(probs, sel, E)
+
+    def one_group(xf):                                        # (S, d)
+        if seq_chunk != S:
+            nc = S // seq_chunk
+            outs, auxs = jax.lax.map(
+                one_chunk, xf.reshape(nc, seq_chunk, d))
+            return outs.reshape(S, d), auxs.mean()
+        return one_chunk(xf)
+
+    out, aux = jax.vmap(one_group)(x)                         # (B, S, d)
+
+    if "shared" in p:
+        sh = p["shared"]
+        n_sh = sh["w_gate"].shape[0]
+        xf = x.reshape(B * S, d)
+        xe = jnp.broadcast_to(xf, (n_sh, B * S, d))
+        out = out + _expert_ffn(sh, xe).sum(axis=0).reshape(B, S, d)
+
+    return out, aux.mean()
+
+
+def _load_balance_loss(probs, sel, E):
+    """Switch-style auxiliary loss (mean prob × mean assignment)."""
+    T, K = sel.shape
+    hot = jax.nn.one_hot(sel, E, dtype=jnp.float32).sum(axis=1)  # (T, E)
+    frac_tokens = hot.mean(axis=0)
+    frac_probs = probs.mean(axis=0)
+    return E * jnp.sum(frac_tokens * frac_probs) / K

@@ -1,0 +1,99 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    a_t  = exp(-c · softplus(Λ) · σ(W_a x_t))          (gated decay)
+    h_t  = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+preceded by a short temporal conv (width 4) and wrapped in a gated
+linear unit, following arXiv:2402.19427.  Like RWKV, the recurrence is a
+data-dependent loop-carried cycle — chasing under the paper's taxonomy —
+so the inline prefetcher applies to this arch only at the embedding and
+local-attention layers (see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import dtype_of, init_linear, linear
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d, dtype = cfg.d_model, dtype_of(cfg)
+    dr = cfg.rglru_d_rnn or d
+    W = cfg.rglru_conv_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": init_linear(ks[0], d, dr, dtype),       # input branch
+        "w_gate": init_linear(ks[1], d, dr, dtype),    # GLU gate branch
+        "w_out": init_linear(ks[2], dr, d, dtype),
+        "conv": (jax.random.normal(ks[3], (W, dr), jnp.float32)
+                 * 0.1).astype(dtype),
+        "w_a": init_linear(ks[4], dr, dr, dtype),      # recurrence gate
+        "w_i": init_linear(ks[5], dr, dr, dtype),      # input gate
+        "lam": jnp.full((dr,), 0.7, dtype=jnp.float32),  # Λ (softplus'd)
+    }
+
+
+def _conv1d(p, x, conv_state=None):
+    """Causal temporal conv, width W.  x: (B, S, dr)."""
+    W = p["conv"].shape[0]
+    if conv_state is None:
+        x_pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([conv_state, x], axis=1)
+    out = sum(x_pad[:, i:i + x.shape[1]] * p["conv"][i]
+              for i in range(W))
+    return out, x_pad[:, -(W - 1):]
+
+
+def _gates(p, u):
+    a_log = -_C * jax.nn.softplus(p["lam"]) * jax.nn.sigmoid(
+        linear(p["w_a"], u).astype(jnp.float32))
+    a = jnp.exp(a_log)
+    gated_in = jax.nn.sigmoid(linear(p["w_i"], u)) * u
+    scale = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, (scale * gated_in.astype(jnp.float32))
+
+
+def rglru_seq(p, x, cfg: ModelConfig, state=None):
+    """x: (B, S, d) -> (B, S, d).  state = (h, conv_state)."""
+    B, S, d = x.shape
+    dr = cfg.rglru_d_rnn or d
+    u = linear(p["w_x"], x)                               # (B, S, dr)
+    h0 = (jnp.zeros((B, dr), jnp.float32) if state is None else state[0])
+    conv_state = None if state is None else state[1]
+    u, conv_state = _conv1d(p, u, conv_state)
+    a, bx = _gates(p, u)                                  # (B, S, dr) f32
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    h_f, hs = lax.scan(step, h0, (a.swapaxes(0, 1), bx.swapaxes(0, 1)))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)                # (B, S, dr)
+    gate = jax.nn.gelu(linear(p["w_gate"], x))
+    return linear(p["w_out"], hs * gate), (h_f, conv_state)
+
+
+def rglru_step(p, x_t, state, cfg: ModelConfig):
+    """x_t: (B, d); state = (h, conv_state (B, W-1, dr))."""
+    h, conv_state = state
+    u = linear(p["w_x"], x_t)[:, None]                    # (B, 1, dr)
+    u, conv_state = _conv1d(p, u, conv_state)
+    a, bx = _gates(p, u)
+    h = a[:, 0] * h + bx[:, 0]
+    gate = jax.nn.gelu(linear(p["w_gate"], x_t))
+    out = linear(p["w_out"], h.astype(x_t.dtype) * gate)
+    return out, (h, conv_state)
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    dr = cfg.rglru_d_rnn or cfg.d_model
+    W = cfg.rglru_conv_width
+    return (jnp.zeros((batch, dr), jnp.float32),
+            jnp.zeros((batch, W - 1, dr), dtype=dtype_of(cfg)))

@@ -1,0 +1,155 @@
+"""RWKV-6 "Finch" time-mix layer (data-dependent decay linear attention).
+
+Per head, state ``S`` is a (dh, dh) matrix updated per token:
+
+    out_t = r_t · (S + (u ⊙ k_t) v_tᵀ)
+    S     = diag(w_t) S + k_t v_tᵀ
+
+with the decay ``w_t = exp(-exp(decay(x_t)))`` *data-dependent* (the
+Finch contribution) and token-shift interpolation on the projections.
+
+DIL-screen note (DESIGN.md §Arch-applicability): the state recurrence
+``S_t = f(x_t) · S_{t-1} + ...`` is a loop-carried cycle whose inputs are
+the live activations — under the paper's taxonomy this is *chasing*-like
+(un-prefetchable, the bottleneck IS the serial chain), so the inline
+prefetcher is *not* applied here; it still applies to the embedding
+gather feeding this model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import dtype_of, init_linear, linear
+
+
+def n_rwkv_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def init_rwkv6(key, cfg: ModelConfig):
+    d, dtype = cfg.d_model, dtype_of(cfg)
+    dh = cfg.rwkv_head_dim
+    H = n_rwkv_heads(cfg)
+    ks = jax.random.split(key, 8)
+    lora = 32
+    return {
+        "w_r": init_linear(ks[0], d, d, dtype),
+        "w_k": init_linear(ks[1], d, d, dtype),
+        "w_v": init_linear(ks[2], d, d, dtype),
+        "w_g": init_linear(ks[3], d, d, dtype),
+        "w_o": init_linear(ks[4], d, d, dtype),
+        # data-dependent decay: low-rank ddlerp (Finch)
+        "decay_a": init_linear(ks[5], d, lora, dtype),
+        "decay_b": init_linear(ks[6], lora, d, dtype),
+        "decay_base": jnp.full((d,), -5.0, dtype=dtype),
+        "bonus": jnp.zeros((H, dh), dtype=dtype),
+        # token-shift mix coefficients
+        "mix": jnp.full((5, d), 0.5, dtype=dtype),
+    }
+
+
+def _proj(p, x_cur, x_prev):
+    """Token-shift interpolation then the five projections."""
+    mixed = [x_cur * m + x_prev * (1 - m) for m in p["mix"]]
+    r = linear(p["w_r"], mixed[0])
+    k = linear(p["w_k"], mixed[1])
+    v = linear(p["w_v"], mixed[2])
+    g = jax.nn.silu(linear(p["w_g"], mixed[3]))
+    decay = p["decay_base"] + linear(
+        p["decay_b"], jnp.tanh(linear(p["decay_a"], mixed[4])))
+    w = jnp.exp(-jnp.exp(decay.astype(jnp.float32)))        # (…, d) in (0,1)
+    return r, k, v, g, w
+
+
+def _heads(x, H, dh):
+    return x.reshape(x.shape[:-1] + (H, dh))
+
+
+def rwkv6_seq(p, x, cfg: ModelConfig, state=None, chunk: int = 64):
+    """Full-sequence time-mix.  x: (B, S, d) -> (out, (S_state, x_last)).
+
+    Memory discipline for long sequences (the 4k-train / 32k-prefill
+    shapes): the five projections are computed as full-sequence matmuls
+    *outside* the recurrence (MXU-shaped work), and the serial state
+    update runs as a **chunked scan with rematerialisation** — only the
+    (B, H, dh, dh) state at chunk boundaries is saved for backward, and
+    each chunk's internals are recomputed during the backward pass.
+    Without this, a 4096-step scan stashes ~34 GB/device of per-step
+    outer products.
+    """
+    B, S, d = x.shape
+    dh = cfg.rwkv_head_dim
+    H = n_rwkv_heads(cfg)
+    if state is None:
+        s0 = jnp.zeros((B, H, dh, dh), dtype=jnp.float32)
+        x_prev0 = jnp.zeros((B, d), dtype=x.dtype)
+    else:
+        s0, x_prev0 = state
+    u = p["bonus"].astype(jnp.float32)
+
+    # vectorised token shift + projections over the whole sequence
+    x_shift = jnp.concatenate([x_prev0[:, None], x[:, :-1]], axis=1)
+    r, k, v, g, w = _proj(p, x, x_shift)                  # each (B, S, d)
+    rh = _heads(r, H, dh).astype(jnp.float32)             # (B, S, H, dh)
+    kh = _heads(k, H, dh).astype(jnp.float32)
+    vh = _heads(v, H, dh).astype(jnp.float32)
+    wh = _heads(w, H, dh)
+
+    n_chunks = max(1, S // chunk)
+    assert S % n_chunks == 0, "sequence must divide the rwkv chunk"
+    csz = S // n_chunks
+
+    def split(t):   # (B, S, H, dh) -> (n_chunks, B, csz, H, dh)
+        return t.reshape(B, n_chunks, csz, H, dh).swapaxes(0, 1)
+
+    def chunk_fn(s, inp):
+        rc, kc, vc, wc = inp                              # (B, csz, H, dh)
+
+        def step(s, t):
+            r_t, k_t, v_t, w_t = t                        # (B, H, dh)
+            a = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+            out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                             s + u[None, :, :, None] * a)
+            s = w_t[..., None] * s + a
+            return s, out
+
+        s, ys = lax.scan(step, s,
+                         (rc.swapaxes(0, 1), kc.swapaxes(0, 1),
+                          vc.swapaxes(0, 1), wc.swapaxes(0, 1)))
+        return s, ys.swapaxes(0, 1)                       # (B, csz, H, dh)
+
+    s_f, ys = lax.scan(jax.checkpoint(chunk_fn), s0,
+                       (split(rh), split(kh), split(vh), split(wh)))
+    ys = ys.swapaxes(0, 1).reshape(B, S, d)               # stitch chunks
+    y = ys.astype(x.dtype) * g
+    out = linear(p["w_o"], y)
+    return out, (s_f, x[:, -1])
+
+
+def rwkv6_step(p, x_t, state, cfg: ModelConfig):
+    """Single decode step.  x_t: (B, d)."""
+    B, d = x_t.shape
+    dh = cfg.rwkv_head_dim
+    H = n_rwkv_heads(cfg)
+    s, x_prev = state
+    r, k, v, g, w = _proj(p, x_t, x_prev)
+    rh = _heads(r, H, dh).astype(jnp.float32)
+    kh = _heads(k, H, dh).astype(jnp.float32)
+    vh = _heads(v, H, dh).astype(jnp.float32)
+    wh = _heads(w, H, dh)
+    u = p["bonus"].astype(jnp.float32)
+    a = jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    out = jnp.einsum("bhk,bhkv->bhv", rh, s + u[None, :, :, None] * a)
+    s = wh[..., None] * s + a
+    y = (out.reshape(B, d).astype(x_t.dtype)) * g
+    return linear(p["w_o"], y), (s, x_t)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    d, dh = cfg.d_model, cfg.rwkv_head_dim
+    H = n_rwkv_heads(cfg)
+    return (jnp.zeros((batch, H, dh, dh), dtype=jnp.float32),
+            jnp.zeros((batch, d), dtype=dtype_of(cfg)))

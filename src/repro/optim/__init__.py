@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from .compress import compress_grads, init_error_feedback  # noqa: F401
+from .schedule import wsd_schedule  # noqa: F401

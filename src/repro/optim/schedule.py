@@ -1,0 +1,11 @@
+"""Warmup-stable-decay LR schedule (jit-safe)."""
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, *, peak_lr=3e-4, warmup=100, stable=1000, decay=1000,
+                 floor=0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * jnp.minimum(s / max(warmup, 1), 1.0)
+    t = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+    dec = peak_lr * (1.0 - (1.0 - floor) * t)
+    return jnp.where(s < warmup + stable, warm, dec)

@@ -1,0 +1,4 @@
+from .sharding import (batch_pspec, data_axes_of, param_pspecs,  # noqa: F401
+                       cache_pspecs, make_shardings, constrain,
+                       activation_sharding, shard_residual, shard_logits,
+                       gather_weights)

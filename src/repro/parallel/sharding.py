@@ -1,0 +1,290 @@
+"""Logical sharding rules for the production mesh.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  The batch shards over every non-"model" axis; weights are
+**2-D sharded** (tensor-parallel dim on "model", the other dim on the
+data axes — fully-sharded weights, ZeRO-3-style) so 104B/132B-class
+models fit per-device HBM for both train and serve lowering.  XLA SPMD
+inserts the all-gathers; the roofline collective term prices them.
+
+Rules are matched on parameter-path names, with a divisibility fallback
+that progressively un-shards dims that do not divide the mesh (e.g.
+whisper's vocab 51866 on a 16-way "model" axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.tree_util as jtu
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes_of(mesh: Mesh):
+    axes = tuple(a for a in mesh.axis_names if a not in ("model",))
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, shape, spec: P) -> P:
+    """Drop sharding on any dim the shape does not divide."""
+    fixed = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0:
+            fixed.append(axis)
+        else:
+            fixed.append(None)
+    return P(*fixed)
+
+
+_LAST = object()
+
+
+def _rule_for(path: str, ndim: int, data):
+    """Return the logical PartitionSpec for a parameter path."""
+    # ---- embeddings / heads ------------------------------------------
+    if path.endswith("embed/table"):
+        return P("model", data)
+    if "lm_head" in path:
+        return P(data, "model")
+    # ---- attention ----------------------------------------------------
+    if any(k in path for k in ("wq/w", "wk/w", "wv/w")):
+        return P(data, "model")
+    if "wo/w" in path:
+        return P("model", data)
+    # ---- MoE ----------------------------------------------------------
+    if "experts/" in path:
+        # (E, d, de) / (E, de, d): expert-parallel on "model"
+        return P("model", data, None)
+    if "shared/" in path:
+        # shared banks are few (deepseek: 2) — shard the matmul dims
+        return P(None, data, "model")
+    if "router" in path:
+        return P(data, None)
+    # ---- dense MLP -----------------------------------------------------
+    if any(k in path for k in ("w_gate/w", "w_up/w")):
+        return P(data, "model")
+    if "w_down/w" in path:
+        return P("model", data)
+    # ---- rwkv / rglru ---------------------------------------------------
+    if any(k in path for k in ("w_r/w", "w_k/w", "w_v/w", "w_g/w",
+                               "w_x/w", "w_a/w", "w_i/w")):
+        return P(data, "model")
+    if any(k in path for k in ("w_o/w", "w_out/w")):
+        return P("model", data)
+    if "decay_a" in path:
+        return P(data, None)
+    if "decay_b" in path:
+        return P(None, "model")
+    if "conv" in path:
+        return P(None, "model")
+    # ---- defaults: replicate scales/biases/norms -------------------------
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jtu.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jtu.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspecs(params_tree, mesh: Mesh, mode: str = "train",
+                 serve_budget_bytes: int = 11 * 2**30):
+    """PartitionSpec tree for a parameter pytree (works on avals too).
+
+    Stacked-layer parameters (the scanned units) carry a leading
+    ``n_units`` axis; the name rule describes the *trailing* dims, so the
+    spec is left-padded with ``None`` to the leaf's rank.
+
+    ``mode="serve"``: weights shard on "model" ONLY (replicated over the
+    data axes) when the TP-sharded copy fits ``serve_budget_bytes`` per
+    chip.  Inference has no optimizer state, so the 2-D (ZeRO-style)
+    sharding that training needs would force a full weight all-gather
+    per decode step — the dominant collective in every baseline decode
+    cell (§Perf).  Over-budget models (command-r/dbrx class) keep 2-D.
+    """
+    data = data_axes_of(mesh)
+    drop_data = False
+    if mode == "serve":
+        total = sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jtu.tree_leaves(params_tree))
+        drop_data = total / mesh.shape["model"] <= serve_budget_bytes
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        spec = _rule_for(_path_str(path), len(shape), data)
+        if drop_data:
+            spec = P(*[None if a == data else a for a in tuple(spec)])
+        pad = len(shape) - len(tuple(spec))
+        if pad > 0:
+            spec = P(*((None,) * pad + tuple(spec)))
+        return _fit(mesh, shape, spec)
+
+    return jtu.tree_map_with_path(leaf_spec, params_tree)
+
+
+def batch_pspec(batch_tree, mesh: Mesh):
+    """Shard dim 0 (batch) of every input over the data axes."""
+    data = data_axes_of(mesh)
+
+    def leaf_spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        return _fit(mesh, leaf.shape, P(data))
+
+    return jtu.tree_map(leaf_spec, batch_tree)
+
+
+def cache_pspecs(cache_tree, mesh: Mesh):
+    """KV caches / recurrent states: batch over data axes AND a model-axis
+    shard on the largest remaining dim.
+
+    GQA KV *heads* rarely divide a 16-way model axis (kv=8), so the KV
+    cache shards its **sequence** dim on "model" instead — decode
+    attention then computes per-shard partial softmax stats that XLA
+    all-reduces (tiny: O(B·H) scalars), which is what keeps a 32k-token
+    cache at ~2 GB/device instead of 38 GB replicated.  Recurrent states
+    shard heads (rwkv) / channels (rglru) on "model".
+    """
+    data = data_axes_of(mesh)
+
+    def leaf_spec(path, x):
+        p = _path_str(path)
+        nd = getattr(x, "ndim", 0)
+        if nd == 0:
+            return P()
+        # stacked (scanned) layer caches carry a leading n_units axis
+        lead = 1 if (p.startswith("units/") or p.split("/")[0] == "kv") \
+            else 0
+        body = nd - lead
+        if "kv/" in p and body == 4:            # (B, S, Hkv, dh)
+            spec = (data, "model", None, None)
+        elif "rwkv/0" in p and body == 4:       # (B, H, dh, dh)
+            spec = (data, "model", None, None)
+        elif "rwkv/1" in p and body == 2:       # (B, d) token-shift
+            spec = (data, "model")
+        elif "rglru/0" in p and body == 2:      # (B, dr)
+            spec = (data, "model")
+        elif "rglru/1" in p and body == 3:      # (B, W-1, dr)
+            spec = (data, None, "model")
+        elif "enc_out" in p and body == 3:      # (B, F, d)
+            spec = (data, None, "model")
+        else:
+            spec = (data,) + (None,) * (body - 1)
+        return _fit(mesh, x.shape, P(*((None,) * lead + spec)))
+
+    return jtu.tree_map_with_path(leaf_spec, cache_tree)
+
+
+def make_shardings(pspec_tree, mesh: Mesh):
+    return jtu.tree_map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(tree, pspec_tree):
+    return jtu.tree_map(
+        lambda spec, x: jax.lax.with_sharding_constraint(x, spec),
+        pspec_tree, tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context.
+#
+# Residual activations (B, S, d) saved by per-block remat would otherwise
+# be replicated over "model" (the block output all-reduce leaves them
+# replicated) — at (16, 4096, 12288)·bf16 × 64 layers that alone blows
+# per-device HBM.  Under this context the model constrains block
+# boundaries / embeddings to shard d on "model" (sequence-parallel-style)
+# and the LM logits to shard the vocab on "model" (a 40 GB/device f32
+# logits tensor otherwise).  Models call the hooks unconditionally; with
+# no context active they are no-ops, so single-device tests never see
+# sharding machinery.
+# ---------------------------------------------------------------------------
+
+import threading
+
+_ACT = threading.local()
+
+
+class activation_sharding:
+    """Context manager enabling activation constraints during tracing."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        self.data = data_axes_of(mesh)
+
+    def __enter__(self):
+        _ACT.mesh, _ACT.data = self.mesh, self.data
+        return self
+
+    def __exit__(self, *exc):
+        _ACT.mesh = _ACT.data = None
+
+
+def _maybe(x, spec):
+    mesh = getattr(_ACT, "mesh", None)
+    if mesh is None or spec is None:
+        return x
+    fitted = _fit(mesh, x.shape, spec)
+    return jax.lax.with_sharding_constraint(x, fitted)
+
+
+def shard_residual(x):
+    """(B, S, d): shard batch on data axes and d on "model" (SP-style)."""
+    data = getattr(_ACT, "data", None)
+    if data is None:
+        return x
+    spec = P(data, None, "model") if x.ndim == 3 else P(data, "model")
+    return _maybe(x, spec)
+
+
+def shard_logits(x):
+    """(B, S, V) / (B, V): shard the vocab dim on "model"."""
+    data = getattr(_ACT, "data", None)
+    if data is None:
+        return x
+    spec = P(data, None, "model") if x.ndim == 3 else P(data, "model")
+    return _maybe(x, spec)
+
+
+def gather_weights(params_tree):
+    """Re-shard weights to model-axis-only INSIDE the train step (§Perf).
+
+    2-D (ZeRO-style) storage all-gathers every weight on every *use* —
+    3 uses × microbatches per step.  Constraining params to model-only
+    once, before the microbatch scan, makes the gathered copy a
+    scan-invariant: XLA gathers it once per step (and reduce-scatters
+    the gradient once at the boundary).  Costs 2·N/model bytes of live
+    HBM — only viable when that fits (16B-class models; command-r/dbrx
+    keep per-use gathering).  No-op without an activation_sharding
+    context (single-device tests).
+    """
+    mesh = getattr(_ACT, "mesh", None)
+    data = getattr(_ACT, "data", None)
+    if mesh is None:
+        return params_tree
+
+    def leaf_spec(path, leaf):
+        spec = _rule_for(_path_str(path), leaf.ndim, data)
+        spec = P(*[None if a == data else a for a in tuple(spec)])
+        pad = leaf.ndim - len(tuple(spec))
+        if pad > 0:
+            spec = P(*((None,) * pad + tuple(spec)))
+        return _fit(mesh, leaf.shape, spec)
+
+    return jtu.tree_map_with_path(
+        lambda p, x: jax.lax.with_sharding_constraint(
+            x, leaf_spec(p, x)), params_tree)

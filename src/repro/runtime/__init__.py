@@ -1,0 +1,2 @@
+from .train_loop import Trainer, TrainConfig, make_train_step  # noqa: F401
+from .ft import StragglerWatchdog, ElasticController  # noqa: F401

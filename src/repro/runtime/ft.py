@@ -1,0 +1,64 @@
+"""Fault tolerance: straggler detection + elastic re-mesh.
+
+On a real multi-pod deployment these hooks sit on the coordinator:
+
+* :class:`StragglerWatchdog` keeps a per-host EWMA of step wall-time and
+  flags hosts whose last step exceeded ``threshold ×`` the fleet median —
+  the scheduler can then drain the host and trigger an elastic re-mesh.
+  The detection logic is pure and fully unit-testable off-hardware.
+* :class:`ElasticController` owns recovery policy: given a new device
+  count it proposes the nearest valid mesh (keeping the "model" axis —
+  changing TP degree would resize weight shards, which we only allow at
+  checkpoint-restore boundaries) and restores the latest checkpoint with
+  the new shardings (`checkpoint.restore` reshards at load time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import statistics
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    threshold: float = 2.0       # × fleet median
+    alpha: float = 0.3           # EWMA coefficient
+    _ewma: dict = dataclasses.field(default_factory=dict)
+
+    def observe(self, host: str, step_time_s: float) -> None:
+        prev = self._ewma.get(host)
+        self._ewma[host] = (step_time_s if prev is None
+                            else self.alpha * step_time_s
+                            + (1 - self.alpha) * prev)
+
+    def stragglers(self) -> list[str]:
+        if len(self._ewma) < 2:
+            return []
+        med = statistics.median(self._ewma.values())
+        return [h for h, t in self._ewma.items()
+                if t > self.threshold * med]
+
+    def healthy(self) -> bool:
+        return not self.stragglers()
+
+
+@dataclasses.dataclass
+class ElasticController:
+    model_axis: int              # fixed TP degree
+    min_data: int = 1
+
+    def propose_mesh(self, n_devices: int) -> tuple[int, int]:
+        """Largest (data, model) grid with the fixed model axis that fits
+        ``n_devices`` — drop stragglers, keep training."""
+        data = n_devices // self.model_axis
+        if data < self.min_data:
+            raise RuntimeError(
+                f"not enough devices ({n_devices}) for model axis "
+                f"{self.model_axis}")
+        return (data, self.model_axis)
+
+    def batch_for(self, global_batch: int, data: int) -> int:
+        """Keep per-replica batch constant; shrink the global batch to the
+        nearest multiple when replicas are lost (synchronous elastic)."""
+        per = max(1, global_batch // max(data, 1))
+        return per * data

@@ -1,0 +1,1 @@
+from .engine import ServeEngine, greedy_generate  # noqa: F401

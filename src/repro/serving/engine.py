@@ -1,0 +1,55 @@
+"""Batched serving engine: prefill + decode with KV cache.
+
+The decode loop is the serving-side home of the paper's technique: each
+step embeds the sampled token (irregular vocab gather) and reads the KV
+cache.  With the paged allocator the KV read is ``pool[page_table[...]]``
+— the indirection the ``paged_kv`` kernel prefetches.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .. import models
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    cfg: object
+    params: object
+    capacity: int = 256
+
+    def prefill(self, tokens, extra=None):
+        batch = {"tokens": tokens}
+        if extra:
+            batch.update(extra)
+        logits, cache = models.prefill(self.params, batch, self.cfg,
+                                       capacity=self.capacity)
+        return logits, cache
+
+    def decode(self, cache, last_logits, n_steps: int):
+        """Greedy decode ``n_steps`` tokens for the whole batch."""
+        tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+
+        def body(carry, _):
+            tok, cache = carry
+            logits, cache = models.decode_step(self.params, cache, tok,
+                                               self.cfg)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (nxt, cache), tok
+
+        (_, cache), toks = jax.lax.scan(body, (tok, cache), None,
+                                        length=n_steps)
+        return toks.swapaxes(0, 1), cache   # (B, n_steps)
+
+
+def greedy_generate(cfg, params, prompt_tokens, n_new: int,
+                    capacity: int | None = None, extra=None):
+    """Convenience: prefill a prompt batch then greedy-decode n_new."""
+    cap = capacity or (prompt_tokens.shape[1] + n_new + 1)
+    eng = ServeEngine(cfg, params, capacity=cap)
+    logits, cache = eng.prefill(prompt_tokens, extra=extra)
+    toks, _ = eng.decode(cache, logits, n_new)
+    return toks

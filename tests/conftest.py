@@ -1,0 +1,9 @@
+import os
+import sys
+
+# tests must see the real host device count (the 512-device override is
+# exclusively for launch/dryrun.py)
+assert "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", "")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,133 @@
+"""DIL screen unit tests: the four canonical patterns of the paper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dil
+
+N = 1 << 18
+TABLE = np.arange(4 * N, dtype=np.float32).reshape(N, 4)   # 4 MiB
+NXT = np.random.default_rng(0).permutation(N).astype(np.int32)
+KEYS = np.random.default_rng(1).random(N, dtype=np.float32)
+DELINQ = 1 << 20
+
+
+def _screen(body, carry, x):
+    return dil.screen_loop(body, carry, x, delinquent_bytes=DELINQ)
+
+
+class TestClassification:
+    def test_hash_index_is_prefetchable(self):
+        def body(c, x):
+            i, acc = c
+            idx = (x * 40503) % N
+            return (i + 1, acc + jnp.take(TABLE, idx, axis=0).sum()), None
+        r = _screen(body, (jnp.int32(0), jnp.float32(0)), jnp.int32(3))
+        (load,) = r.loads
+        assert load.index_class == dil.IRREGULAR
+        assert load.delinquent and load.runnable and load.control_independent
+        assert load.prefetchable and load.critical
+
+    def test_striding_load_left_to_hardware(self):
+        def body(c, x):
+            i, acc = c
+            return (i + 2, acc + jnp.take(TABLE, i, axis=0).sum()), None
+        r = _screen(body, (jnp.int32(0), jnp.float32(0)), jnp.int32(0))
+        (load,) = r.loads
+        assert load.index_class == dil.STRIDING
+        assert not load.prefetchable
+
+    def test_pointer_chase_is_chasing(self):
+        def body(c, x):
+            idx, acc = c
+            idx2 = jnp.take(NXT, idx)
+            row = jnp.take(TABLE, idx2, axis=0)
+            return (idx2, acc + row.sum()), None
+        r = _screen(body, (jnp.int32(0), jnp.float32(0)), jnp.int32(0))
+        assert all(not l.runnable for l in r.loads if l.index_class ==
+                   dil.IRREGULAR)
+        assert not r.prefetchable
+
+    def test_bst_descent_excluded(self):
+        def body(c, x):
+            idx, acc = c
+            v = jnp.take(KEYS, idx)
+            nxt = jnp.where(v < x, 2 * idx + 1, 2 * idx + 2) % N
+            return (nxt, acc + v), None
+        r = _screen(body, (jnp.int32(0), jnp.float32(0)), jnp.float32(0.5))
+        assert not r.prefetchable
+
+    def test_small_table_not_delinquent(self):
+        small = np.zeros((16, 4), np.float32)
+
+        def body(c, x):
+            i, acc = c
+            idx = (x * 7) % 16
+            return (i + 1, acc + jnp.take(small, idx, axis=0).sum()), None
+        r = _screen(body, (jnp.int32(0), jnp.float32(0)), jnp.int32(1))
+        (load,) = r.loads
+        assert load.index_class == dil.IRREGULAR and not load.delinquent
+        assert not load.prefetchable
+
+    def test_dependent_chain_is_prefetchable(self):
+        feeder = np.arange(4096, dtype=np.int32)
+
+        def body(c, _):
+            i, acc = c
+            b = jnp.take(feeder, i)              # striding feeder
+            idx = (b * 7 + 3) % N                # f(b[i])
+            return (i + 1, acc + jnp.take(TABLE, idx, axis=0).sum()), None
+        r = _screen(body, (jnp.int32(0), jnp.float32(0)), None)
+        big = [l for l in r.loads if l.table_bytes >= DELINQ]
+        assert len(big) == 1 and big[0].prefetchable
+
+    def test_coalescing_same_cache_line(self):
+        def body(c, x):
+            i, acc = c
+            idx = (x * 40503) % (N - 1)
+            a = jnp.take(TABLE, idx, axis=0).sum()
+            b = jnp.take(TABLE, idx + 1, axis=0).sum()   # same-line offset
+            return (i + 1, acc + a + b), None
+        r = _screen(body, (jnp.int32(0), jnp.float32(0)), jnp.int32(3))
+        assert len(r.prefetchable) == 2
+        assert len(r.critical_targets) == 1
+
+
+class TestDynamicDeltas:
+    def test_hash_deltas_irregular(self):
+        def body(c, x):
+            i, acc = c
+            idx = (x * 40503) % N
+            return (i + 1, acc + jnp.take(TABLE, idx, axis=0).sum()), None
+        r = _screen(body, (jnp.int32(0), jnp.float32(0)), jnp.int32(3))
+        xs = np.random.default_rng(2).integers(
+            0, 1 << 30, size=128).astype(np.int32)
+        h = dil.delta_histogram(r, r.loads[0],
+                                (jnp.int32(0), jnp.float32(0)), xs, 128)
+        assert dil.is_irregular_deltas(h)
+
+    def test_stride_deltas_regular(self):
+        def body(c, x):
+            i, acc = c
+            return (i + 2, acc + jnp.take(TABLE, i, axis=0).sum()), None
+        r = _screen(body, (jnp.int32(0), jnp.float32(0)), jnp.int32(0))
+        xs = np.zeros(64, np.int32)
+        h = dil.delta_histogram(r, r.loads[0],
+                                (jnp.int32(0), jnp.float32(0)), xs, 64)
+        assert len(h) == 1 and not dil.is_irregular_deltas(h)
+
+
+def test_screen_whole_function_finds_scan_loops():
+    def hist(xs):
+        def body(c, x):
+            idx = (x * 40503) % N
+            return c + jnp.take(TABLE, idx, axis=0).sum(), None
+        out, _ = jax.lax.scan(body, jnp.float32(0), xs)
+        return out
+
+    rs = dil.screen(hist, jnp.arange(64, dtype=jnp.int32),
+                    delinquent_bytes=DELINQ)
+    assert len(rs) == 1
+    (rep,) = rs.values()
+    assert rep.critical_targets

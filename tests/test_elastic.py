@@ -1,0 +1,65 @@
+"""Elastic re-mesh: a checkpoint written on one mesh restores onto a
+different device count/shape.  The restore path device_puts each leaf
+with the *target* sharding, so re-meshing is pure load-time work — this
+is the recovery half of the straggler/elastic story (runtime/ft.py).
+
+Runs in a subprocess with 4 forced host-platform devices (the parent
+session must keep seeing 1 device).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, "src")
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import AxisType
+
+    import repro.models as models
+    from repro.checkpoint import restore, save
+    from repro.configs import get_arch, reduced
+    from repro.parallel import make_shardings, param_pspecs
+
+    assert len(jax.devices()) == 4
+    cfg = reduced(get_arch("qwen3-8b"), n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=128)
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    ckpt = sys.argv[1]
+
+    # write on a (1,1) "mesh" (single-host layout)
+    save(ckpt, 1, params)
+
+    # restore onto a 2x2 production-style mesh with proper shardings
+    mesh = jax.make_mesh((2, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    shardings = make_shardings(param_pspecs(params, mesh), mesh)
+    restored = restore(ckpt, 1, params, shardings)
+
+    leaf = restored["units"][0]["attn"]["wq"]["w"]
+    assert len(leaf.sharding.device_set) == 4, leaf.sharding
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # and the restored (resharded) params still serve
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32)}
+    with mesh:
+        logits, _, _ = models.transformer.forward(restored, batch, cfg)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    print("ELASTIC_OK")
+""")
+
+
+def test_restore_onto_larger_mesh(tmp_path):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, str(tmp_path / "ck")],
+        capture_output=True, text=True, timeout=300, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "ELASTIC_OK" in out.stdout, out.stdout + out.stderr

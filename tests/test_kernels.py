@@ -1,0 +1,147 @@
+"""Per-kernel oracle tests: shape/dtype sweeps + hypothesis properties.
+All kernels run in interpret mode on CPU (TPU is the compile target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.kernels as K
+
+RNG = np.random.default_rng(0)
+
+
+class TestPrefetchGather:
+    @pytest.mark.parametrize("dtype", [np.float32, np.int32, np.float16])
+    @pytest.mark.parametrize("R,D,n", [(64, 8, 16), (512, 128, 115),
+                                       (33, 5, 7), (256, 96, 256)])
+    def test_shapes_dtypes(self, dtype, R, D, n):
+        table = (RNG.standard_normal((R, D)) * 10).astype(dtype)
+        idx = RNG.integers(0, R, size=n).astype(np.int32)
+        out = K.prefetch_gather(table, idx, block_rows=8, lookahead=4)
+        np.testing.assert_array_equal(np.asarray(out), table[idx])
+
+    @pytest.mark.parametrize("lookahead", [1, 2, 7, 64])
+    def test_lookahead_sweep(self, lookahead):
+        table = RNG.standard_normal((128, 16)).astype(np.float32)
+        idx = RNG.integers(0, 128, size=40).astype(np.int32)
+        out = K.prefetch_gather(table, idx, block_rows=4,
+                                lookahead=lookahead)
+        np.testing.assert_array_equal(np.asarray(out), table[idx])
+
+    def test_oob_clamped_like_ref(self):
+        table = RNG.standard_normal((32, 4)).astype(np.float32)
+        idx = np.array([-5, 0, 31, 40], np.int32)
+        out = K.prefetch_gather(table, idx, block_rows=4, lookahead=2)
+        ref = K.prefetch_gather_ref(jnp.asarray(table), jnp.asarray(idx))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 200), st.integers(2, 100), st.integers(0, 2**31 - 1))
+    def test_property_random(self, n, rows, seed):
+        rng = np.random.default_rng(seed)
+        table = rng.standard_normal((rows, 8)).astype(np.float32)
+        idx = rng.integers(0, rows, size=n).astype(np.int32)
+        out = K.prefetch_gather(table, idx, block_rows=8, lookahead=8)
+        np.testing.assert_array_equal(np.asarray(out), table[idx])
+
+
+class TestHashProbe:
+    def _table(self, n_keys=200, n_slots=1024, window=8, seed=0):
+        rng = np.random.default_rng(seed)
+        keys = rng.choice(1 << 20, size=n_keys, replace=False).astype(np.int32)
+        vals = rng.integers(0, 10000, size=n_keys).astype(np.int32)
+        return K.build_table(keys, vals, n_slots, window), keys, vals
+
+    def test_hits_and_misses(self):
+        tab, keys, vals = self._table()
+        rng = np.random.default_rng(3)
+        misses = rng.integers(1 << 21, 1 << 22, size=64).astype(np.int32)
+        q = np.concatenate([keys[:64], misses])
+        got = K.hash_probe(jnp.asarray(tab), jnp.asarray(q), window=8,
+                           block=8, lookahead=4)
+        ref = K.hash_probe_ref(jnp.asarray(tab), jnp.asarray(q), window=8)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    @pytest.mark.parametrize("window,block,lookahead",
+                             [(4, 4, 2), (8, 8, 8), (16, 4, 3)])
+    def test_param_sweep(self, window, block, lookahead):
+        tab, keys, _ = self._table(window=window)
+        got = K.hash_probe(jnp.asarray(tab), jnp.asarray(keys[:50]),
+                           window=window, block=block, lookahead=lookahead)
+        ref = K.hash_probe_ref(jnp.asarray(tab), jnp.asarray(keys[:50]),
+                               window=window)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 80))
+    def test_property_inserted_keys_found(self, seed, nq):
+        tab, keys, vals = self._table(seed=seed)
+        lut = dict(zip(keys.tolist(), vals.tolist()))
+        rng = np.random.default_rng(seed)
+        q = rng.choice(keys, size=nq)
+        got = np.asarray(K.hash_probe(jnp.asarray(tab), jnp.asarray(q),
+                                      window=8, block=8, lookahead=4))
+        inserted = np.asarray(tab[:, 0][tab[:, 0] >= 0])
+        for qi, (val, found) in zip(q.tolist(), got.tolist()):
+            if qi in inserted:   # key survived bounded-probe insertion
+                assert found == 1 and val == lut[qi]
+
+
+class TestCsrGather:
+    @pytest.mark.parametrize("n,M,D", [(16, 4, 8), (40, 8, 64), (7, 16, 5)])
+    def test_shapes(self, n, M, D):
+        feats = RNG.standard_normal((128, D)).astype(np.float32)
+        nbrs = RNG.integers(-1, 128, size=(n, M)).astype(np.int32)
+        got = K.csr_gather_mean(feats, nbrs, lookahead=4)
+        ref = K.csr_gather_mean_ref(jnp.asarray(feats), jnp.asarray(nbrs))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_all_padding_row(self):
+        feats = RNG.standard_normal((32, 8)).astype(np.float32)
+        nbrs = np.full((4, 4), -1, np.int32)
+        got = K.csr_gather_mean(feats, nbrs, lookahead=2)
+        np.testing.assert_array_equal(np.asarray(got), np.zeros((4, 8)))
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_property_random_graphs(self, seed):
+        rng = np.random.default_rng(seed)
+        n, M, D = rng.integers(1, 30), int(rng.integers(1, 10)), 16
+        feats = rng.standard_normal((64, D)).astype(np.float32)
+        nbrs = rng.integers(-1, 64, size=(n, M)).astype(np.int32)
+        got = K.csr_gather_mean(feats, nbrs, lookahead=3)
+        ref = K.csr_gather_mean_ref(jnp.asarray(feats), jnp.asarray(nbrs))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestPagedKV:
+    @pytest.mark.parametrize("B,NP,P,page,D",
+                             [(2, 3, 16, 8, 32), (4, 5, 64, 16, 32),
+                              (1, 1, 4, 4, 8)])
+    def test_shapes(self, B, NP, P, page, D):
+        pool = RNG.standard_normal((P, page, D)).astype(np.float32)
+        ptab = RNG.integers(0, P, size=(B, NP)).astype(np.int32)
+        q = RNG.standard_normal((B, D)).astype(np.float32)
+        got = K.paged_attn_scores(pool, ptab, q, lookahead=3)
+        ref = K.paged_attn_scores_ref(jnp.asarray(pool), jnp.asarray(ptab),
+                                      jnp.asarray(q))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_property(self, seed):
+        rng = np.random.default_rng(seed)
+        B, NP, P = (int(rng.integers(1, 5)), int(rng.integers(1, 6)),
+                    int(rng.integers(1, 32)))
+        pool = rng.standard_normal((P, 8, 16)).astype(np.float32)
+        ptab = rng.integers(0, P, size=(B, NP)).astype(np.int32)
+        q = rng.standard_normal((B, 16)).astype(np.float32)
+        got = K.paged_attn_scores(pool, ptab, q, lookahead=4)
+        ref = K.paged_attn_scores_ref(jnp.asarray(pool), jnp.asarray(ptab),
+                                      jnp.asarray(q))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)

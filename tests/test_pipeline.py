@@ -1,0 +1,153 @@
+"""Carrot-and-horse transform: bit-exactness vs lax.scan (paper §4.2's
+"outputs must match exactly" requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+
+from repro.core import pipeline, planner
+
+N = 1 << 16
+RNG = np.random.default_rng(0)
+TABLE = RNG.standard_normal((N, 8)).astype(np.float32)
+DELINQ = 1 << 20
+
+
+def hash_body(carry, x):
+    i, acc = carry
+    idx = (x * 40503) % N
+    row = jnp.take(TABLE, idx, axis=0)
+    return (i + 1, acc + row.sum()), row[0]
+
+
+XS = RNG.integers(0, 1 << 30, size=257).astype(np.int32)
+INIT = (jnp.int32(0), jnp.float32(0))
+
+
+class TestPrefetchScan:
+    @pytest.mark.parametrize("k", [1, 2, 3, 8, 64, 300])
+    def test_exact_match_all_distances(self, k):
+        ref_c, ref_y = lax.scan(hash_body, INIT, XS)
+        c, y = pipeline.prefetch_scan(hash_body, INIT, XS,
+                                      prefetch_distance=k,
+                                      delinquent_bytes=DELINQ)
+        np.testing.assert_array_equal(np.asarray(c[1]), np.asarray(ref_c[1]))
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(ref_y))
+
+    def test_xs_none_striding_feeder(self):
+        feeder = RNG.integers(0, N, size=512).astype(np.int32)
+
+        def body(carry, _):
+            i, acc = carry
+            b = jnp.take(feeder, i)
+            idx = (b * 7 + 3) % N
+            return (i + 1, acc + jnp.take(TABLE, idx, axis=0).sum()), None
+
+        ref, _ = lax.scan(body, INIT, None, length=200)
+        got, _ = pipeline.prefetch_scan(body, INIT, None,
+                                        prefetch_distance=16, length=200,
+                                        delinquent_bytes=DELINQ)
+        np.testing.assert_array_equal(np.asarray(got[1]),
+                                      np.asarray(ref[1]))
+
+    def test_rejects_chasing(self):
+        nxt = RNG.permutation(N).astype(np.int32)
+
+        def body(carry, _):
+            idx, acc = carry
+            idx2 = jnp.take(nxt, idx)
+            return (idx2, acc + jnp.take(TABLE, idx2, axis=0).sum()), None
+
+        with pytest.raises(ValueError, match="no prefetchable DIL"):
+            pipeline.prefetch_scan(body, INIT, None, length=10,
+                                   delinquent_bytes=DELINQ)
+
+    def test_rejects_regular(self):
+        def body(carry, x):
+            i, acc = carry
+            return (i + 1, acc + jnp.take(TABLE, i, axis=0).sum()), None
+
+        with pytest.raises(ValueError, match="no prefetchable DIL"):
+            pipeline.prefetch_scan(body, INIT, XS, delinquent_bytes=DELINQ)
+
+    def test_jit_compatible(self):
+        @jax.jit
+        def run(xs):
+            c, _ = pipeline.prefetch_scan(hash_body, INIT, xs,
+                                          prefetch_distance=8,
+                                          delinquent_bytes=DELINQ)
+            return c[1]
+
+        ref_c, _ = lax.scan(hash_body, INIT, XS)
+        np.testing.assert_array_equal(np.asarray(run(XS)),
+                                      np.asarray(ref_c[1]))
+
+    def test_grad_through_pipelined_scan(self):
+        """The rewrite stays differentiable (it is pure JAX)."""
+        def loss_ref(table):
+            def body(c, x):
+                idx = (x * 40503) % N
+                return c + jnp.take(table, idx, axis=0).sum(), None
+            out, _ = lax.scan(body, jnp.float32(0), XS[:64])
+            return out
+
+        g_ref = jax.grad(loss_ref)(jnp.asarray(TABLE))
+
+        def loss_pf(table):
+            def body(c, x):
+                idx = (x * 40503) % N
+                return c + jnp.take(table, idx, axis=0).sum(), None
+            out, _ = pipeline.prefetch_scan(body, jnp.float32(0), XS[:64],
+                                            prefetch_distance=8,
+                                            delinquent_bytes=DELINQ)
+            return out
+
+        g_pf = jax.grad(loss_pf)(jnp.asarray(TABLE))
+        np.testing.assert_allclose(np.asarray(g_pf), np.asarray(g_ref),
+                                   rtol=1e-6)
+
+
+class TestManualPipelinedScan:
+    def test_matches_fused_loop(self):
+        k = 8
+
+        def carrot(i, x):
+            return i + 1, (x * 40503) % N
+
+        def gather(idx):
+            return jnp.take(TABLE, idx, axis=0)
+
+        def horse(acc, x, row):
+            return acc + row.sum(), row[0]
+
+        ref_acc = jnp.float32(0)
+        outs = []
+        for x in XS[:40].tolist():
+            _, idx = carrot(0, jnp.int32(x))
+            row = gather(idx)
+            ref_acc, y = horse(ref_acc, x, row)
+            outs.append(np.asarray(y))
+        acc, ys = pipeline.pipelined_scan(
+            carrot, gather, horse, jnp.int32(0), jnp.float32(0),
+            jnp.asarray(XS[:40]), prefetch_distance=k)
+        np.testing.assert_allclose(float(acc), float(ref_acc), rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(ys), np.stack(outs))
+
+
+class TestPlanner:
+    def test_latency_bound(self):
+        k = planner.plan_prefetch_distance(
+            row_bytes=512, flops_per_iter=1e4, hbm_bytes_per_iter=2048)
+        assert k >= 2 and (k & (k - 1)) == 0   # power of two
+
+    def test_vmem_bound(self):
+        k = planner.plan_prefetch_distance(
+            row_bytes=32 * 2**20, flops_per_iter=10, hbm_bytes_per_iter=10)
+        assert k * 32 * 2**20 <= planner.V5E.vmem_bytes
+
+    def test_trip_count_bound(self):
+        k = planner.plan_prefetch_distance(
+            row_bytes=512, flops_per_iter=10, hbm_bytes_per_iter=10,
+            trip_count=6)
+        assert k <= 6
